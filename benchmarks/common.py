@@ -1,0 +1,187 @@
+"""Shared benchmark vehicle: a small trained classifier + analog evaluation.
+
+The paper's accuracy claims are about *trained* networks (zero-peaked
+weight distributions are the mechanism behind proportional mapping), so
+every sensitivity benchmark runs on an MLP classifier trained here on a
+deterministic synthetic 16-class task (CPU, seconds).  The trained weights
+are cached under ``benchmarks/_cache``.
+
+``analog_accuracy`` evaluates that classifier with every weight matrix
+executed through ``repro.core.analog`` — program -> calibrate ADC ranges
+on a calibration split -> test-set accuracy, averaged over programming
+trials (the paper's 10-trial protocol, default 5 here for CPU time).
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+import time
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import adc as adc_lib
+from repro.core.analog import AnalogSpec, analog_matmul, program
+from repro.core.quant import calibrate_act_range
+
+CACHE = os.path.join(os.path.dirname(__file__), "_cache")
+N_CLASSES = 64
+DIMS = (64, 256, 256, 256, N_CLASSES)
+
+
+def make_dataset(key, n: int):
+    """Heavily-overlapping Gaussian clusters with class-dependent warps:
+    hard enough that accuracy sits well below 100% and analog errors bite
+    (the sensitivity regime the paper's Fig. 5 shows for ImageNet)."""
+    kc, kx, kn = jax.random.split(key, 3)
+    labels = jax.random.randint(kc, (n,), 0, N_CLASSES)
+    centers = jax.random.normal(jax.random.PRNGKey(42), (N_CLASSES, DIMS[0]))
+    x = centers[labels] * 0.9
+    x = x + 1.2 * jax.random.normal(kx, (n, DIMS[0]))
+    warp = jax.random.normal(jax.random.PRNGKey(43), (N_CLASSES, DIMS[0]))
+    x = x + 0.5 * warp[labels] * jnp.tanh(x)
+    return x, labels
+
+
+def mlp_forward(params, x, *, act_fn=jax.nn.relu):
+    h = x
+    for i, (w, b) in enumerate(params):
+        h = h @ w + b
+        if i < len(params) - 1:
+            h = act_fn(h)
+    return h
+
+
+def train_mlp(seed: int = 0, steps: int = 1500, lr: float = 3e-3):
+    os.makedirs(CACHE, exist_ok=True)
+    path = os.path.join(CACHE, f"mlp_{seed}.npz")
+    if os.path.exists(path):
+        z = np.load(path)
+        n = len(DIMS) - 1
+        return [(jnp.asarray(z[f"w{i}"]), jnp.asarray(z[f"b{i}"]))
+                for i in range(n)]
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, len(DIMS))
+    params = [
+        (jax.random.normal(ks[i], (DIMS[i], DIMS[i + 1])) * DIMS[i] ** -0.5,
+         jnp.zeros((DIMS[i + 1],)))
+        for i in range(len(DIMS) - 1)
+    ]
+    xtr, ytr = make_dataset(jax.random.PRNGKey(100), 8192)
+
+    def loss(p, x, y):
+        logits = mlp_forward(p, x)
+        return jnp.mean(
+            jax.nn.logsumexp(logits, -1)
+            - jnp.take_along_axis(logits, y[:, None], -1)[:, 0])
+
+    @jax.jit
+    def step(p, k):
+        idx = jax.random.randint(k, (256,), 0, xtr.shape[0])
+        g = jax.grad(loss)(p, xtr[idx], ytr[idx])
+        return jax.tree.map(lambda a, b: a - lr * b, p, g)
+
+    for i in range(steps):
+        params = step(params, jax.random.fold_in(key, i))
+    np.savez(path, **{f"w{i}": np.asarray(w) for i, (w, b) in enumerate(params)},
+             **{f"b{i}": np.asarray(b) for i, (w, b) in enumerate(params)})
+    return params
+
+
+@functools.lru_cache(maxsize=1)
+def eval_data():
+    xca, yca = make_dataset(jax.random.PRNGKey(200), 512)    # calibration
+    xte, yte = make_dataset(jax.random.PRNGKey(300), 2048)   # test
+    return xca, yca, xte, yte
+
+
+def digital_accuracy(params, *, weight_bits=8, act_bits=8) -> float:
+    """8-bit quantized digital baseline (the paper's reference point)."""
+    from repro.core.quant import quantize_acts, quantize_weights
+
+    xca, _, xte, yte = eval_data()
+    h = xte
+    for i, (w, b) in enumerate(params):
+        qw = quantize_weights(w, weight_bits)
+        _, hi = calibrate_act_range(
+            _layer_inputs(params, xca, i), act_bits)
+        qx = quantize_acts(h, act_bits, clip_hi=hi)
+        h = qx.dequant() @ qw.dequant() + b
+        if i < len(params) - 1:
+            h = jax.nn.relu(h)
+    return float(jnp.mean(jnp.argmax(h, -1) == yte))
+
+
+def _layer_inputs(params, x, layer: int):
+    h = x
+    for i, (w, b) in enumerate(params):
+        if i == layer:
+            return h
+        h = jax.nn.relu(h @ w + b)
+    return h
+
+
+def analog_accuracy(
+    params,
+    spec: AnalogSpec,
+    *,
+    trials: int = 5,
+    seed: int = 1234,
+    test_n: Optional[int] = None,
+) -> Tuple[float, float]:
+    """(mean, std) test accuracy of the analog classifier over programming
+    trials.  ``test_n`` subsamples the test set (paper Sec. 4.3's 1000-image
+    subset trick) for expensive configurations (parasitics)."""
+    xca, _, xte, yte = eval_data()
+    if test_n is not None:
+        xte, yte = xte[:test_n], yte[:test_n]
+
+    def run(trial_key):
+        h_te, h_ca = xte, xca
+        for i, (w, b) in enumerate(params):
+            aw = program(w, spec, jax.random.fold_in(trial_key, i))
+            _, act_hi = calibrate_act_range(h_ca, spec.input_bits)
+            need_cal = spec.adc.style == "calibrated"
+            if need_cal:
+                _, stats = analog_matmul(h_ca, aw, spec, act_hi=act_hi,
+                                         collect=True)
+                lo, hi = stats[:, 0], stats[:, 1]
+                if spec.mapping.sliced:
+                    from repro.core.calibrate import constrain_power_of_two
+                    lo, hi = constrain_power_of_two(lo, hi)
+                kw = dict(adc_lo=lo, adc_hi=hi)
+            else:
+                kw = {}
+            y_te = analog_matmul(h_te, aw, spec, act_hi=act_hi, **kw) + b
+            y_ca = analog_matmul(h_ca, aw, spec, act_hi=act_hi, **kw) + b
+            if i < len(params) - 1:
+                h_te, h_ca = jax.nn.relu(y_te), jax.nn.relu(y_ca)
+            else:
+                h_te = y_te
+        return jnp.mean(jnp.argmax(h_te, -1) == yte)
+
+    accs = [float(run(jax.random.fold_in(jax.random.PRNGKey(seed), t)))
+            for t in range(trials)]
+    return float(np.mean(accs)), float(np.std(accs))
+
+
+class Timer:
+    """us-per-call timer for the benchmark CSV."""
+
+    def __init__(self, reps: int = 5):
+        self.reps = reps
+
+    def time(self, fn, *args) -> float:
+        fn(*args)  # compile/warm
+        t0 = time.perf_counter()
+        for _ in range(self.reps):
+            out = fn(*args)
+        jax.block_until_ready(out)
+        return (time.perf_counter() - t0) / self.reps * 1e6
+
+
+def emit(name: str, us: float, derived: str):
+    print(f"{name},{us:.1f},{derived}", flush=True)

@@ -1,0 +1,65 @@
+"""Fig. 18/19: bit-line current accumulation and parasitic-resistance
+sensitivity.
+
+Claims validated:
+  * proportional (differential) mapping reduces bottom-of-line currents by
+    an order of magnitude vs offset (Fig. 18);
+  * offset subtraction is orders of magnitude more sensitive to normalized
+    parasitic resistance than differential cells (Fig. 19(c));
+  * differential accuracy loss is negligible at R_p_hat <= 1e-5 (the
+    realistic operating point for >=100 kOhm cells in scaled metal).
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.adc import ADCConfig
+from repro.core.analog import AnalogSpec, analog_matmul, program
+from repro.core.errors import ErrorModel
+from repro.core.mapping import MappingConfig
+
+from benchmarks.common import (
+    Timer, analog_accuracy, digital_accuracy, emit, eval_data, train_mlp)
+
+
+def main(timer: Timer):
+    params = train_mlp()
+    base = digital_accuracy(params)
+
+    # --- Fig. 18: accumulated bit-line currents ---------------------------
+    xca, _, _, _ = eval_data()
+    w = params[1][0]
+    for scheme in ("offset", "differential"):
+        spec = AnalogSpec(
+            mapping=MappingConfig(scheme=scheme),
+            adc=ADCConfig(style="none"), error=ErrorModel(),
+            input_accum="digital", max_rows=1152)
+        aw = program(w, spec)
+        # LSB input plane activates the most rows (paper Fig. 18)
+        from repro.core.quant import bit_planes, quantize_acts
+
+        h = jax.nn.relu(xca[:64] @ params[0][0] + params[0][1])
+        xq = quantize_acts(h, 8, signed=True)
+        planes = bit_planes(xq.values, 7)
+        lsb = planes[0]
+        i_pos = jnp.abs(lsb) @ aw.g_pos[0, 0]          # bottom-of-line current
+        emit(f"fig18_current_{scheme}", 0.0,
+             f"mean_bitline_current={float(jnp.mean(i_pos)):.2f} "
+             f"(units of I_max; rows={w.shape[0]})")
+
+    # --- Fig. 19(c): accuracy vs normalized parasitic resistance ----------
+    for scheme, accum in (("differential", "analog"), ("offset", "digital")):
+        for r_hat in (1e-5, 1e-4, 1e-3):
+            spec = AnalogSpec(
+                mapping=MappingConfig(scheme=scheme),
+                adc=ADCConfig(style="none"), error=ErrorModel(),
+                input_accum=accum, max_rows=256, r_hat=r_hat)
+            t0 = time.perf_counter()
+            # 256-sample subset: the bit-line circuit solve is the paper's
+            # own tractability bottleneck (Sec. 9.4 skips it entirely)
+            m, s = analog_accuracy(params, spec, trials=1, test_n=256)
+            emit(f"fig19_{scheme}_r{r_hat:g}",
+                 (time.perf_counter() - t0) * 1e6,
+                 f"acc={m:.4f} (drop={base - m:+.4f})")

@@ -1,0 +1,48 @@
+"""Kernel microbenchmarks: Pallas (interpret on CPU) vs jnp oracle, plus
+the vectorized analog path at serving-relevant shapes.  On TPU the same
+entry points compile to Mosaic; interpret-mode timings only demonstrate
+correctness-path overhead, the derived column carries the work sizes."""
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+from benchmarks.common import Timer, emit
+
+
+def main(timer: Timer):
+    for (m, p, rows, n) in [(128, 1, 1152, 256), (256, 2, 1152, 512)]:
+        ks = jax.random.split(jax.random.PRNGKey(0), 3)
+        x = jnp.round(jax.random.normal(ks[0], (m, p, rows)) * 40)
+        gp = jax.random.uniform(ks[1], (p, rows, n)) * 0.1
+        gm = jax.random.uniform(ks[2], (p, rows, n)) * 0.1
+        lo, hi = jnp.float32(-50.0), jnp.float32(50.0)
+        args = dict(adc_lo=lo, adc_hi=hi, adc_bits=8, gain=127.0)
+        f_k = jax.jit(lambda x, gp, gm: ops.analog_mvm(x, gp, gm, **args))
+        f_r = jax.jit(lambda x, gp, gm: ref.analog_mvm_diff(x, gp, gm, **args))
+        us_k = timer.time(f_k, x, gp, gm)
+        us_r = timer.time(f_r, x, gp, gm)
+        macs = m * p * rows * n
+        emit(f"kernel_analog_mvm_{m}x{p}x{rows}x{n}", us_k,
+             f"ref_us={us_r:.1f} macs={macs} interpret=True")
+
+        fb_k = jax.jit(lambda x, gp, gm: ops.analog_mvm_bitserial(
+            x, gp, gm, n_bits=7, **args))
+        fb_r = jax.jit(lambda x, gp, gm: ref.analog_mvm_bitserial(
+            x, gp, gm, n_bits=7, **args))
+        us_bk = timer.time(fb_k, x, gp, gm)
+        us_br = timer.time(fb_r, x, gp, gm)
+        emit(f"kernel_bitserial_{m}x{p}x{rows}x{n}", us_bk,
+             f"ref_us={us_br:.1f} bits=7 (in-VMEM planes vs 8x HBM planes)")
+
+    for (m, k, n, r) in [(128, 1152, 128, 1e-5)]:
+        kx, kg = jax.random.split(jax.random.PRNGKey(1), 2)
+        x = jnp.sign(jax.random.normal(kx, (m, k)))
+        g = jax.random.uniform(kg, (k, n))
+        f_k = jax.jit(lambda g, x: ops.bitline_mvm(g, x, r))
+        f_r = jax.jit(lambda g, x: ref.bitline_mvm(g, x, r))
+        us_k = timer.time(f_k, g, x)
+        us_r = timer.time(f_r, g, x)
+        emit(f"kernel_bitline_{m}x{k}x{n}", us_k,
+             f"ref_us={us_r:.1f} tridiag_solves={m*n}")

@@ -1,0 +1,66 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Usage::
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig8_9]
+"""
+
+import argparse
+import sys
+import time
+
+
+MODULES = [
+    "fig6_conductance",
+    "eq9_snr",
+    "fig8_9_cell_errors",
+    "fig10_onoff",
+    "fig15_16_adc",
+    "fig17_lowprec",
+    "fig19_parasitics",
+    "table3_energy",
+    "table4_sonos",
+    "kernelbench",
+    "roofline",
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from benchmarks.common import Timer, emit
+
+    timer = Timer(reps=3)
+    print("name,us_per_call,derived")
+    for mod_name in MODULES:
+        if args.only and args.only not in mod_name:
+            continue
+        t0 = time.time()
+        if mod_name == "roofline":
+            # roofline reads the dry-run results, no model eval
+            from repro.launch import roofline as rl
+
+            rows = rl.load_all()
+            for r in rows:
+                if r["mesh"] != "pod16x16":
+                    continue
+                emit(
+                    f"roofline_{r['arch']}_{r['shape']}", 0.0,
+                    f"comp={r['compute_s']:.2e}s mem={r['memory_s']:.2e}s "
+                    f"coll={r['collective_s']:.2e}s dom={r['dominant']} "
+                    f"useful={r['useful_ratio']:.2f} "
+                    f"roofline={100*r['roofline_fraction']:.1f}%",
+                )
+            continue
+        mod = __import__(f"benchmarks.{mod_name}", fromlist=["main"])
+        try:
+            mod.main(timer)
+        except Exception as e:  # keep the harness running
+            emit(f"{mod_name}_ERROR", 0.0, repr(e)[:200])
+        print(f"# {mod_name} done in {time.time()-t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Serve a trained LM through the analog pipeline: program -> calibrate ->
+generate, comparing digital and analog generations and perplexity across
+hardware design points (the paper's Table 4 on an LM).
+
+Run: PYTHONPATH=src python examples/analog_serve.py
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.core import analog as A
+from repro.core import errors as E
+from repro.data.synthetic import SyntheticLM
+from repro.models.registry import get_model
+from repro.serve.analog_engine import analog_eval_loss, calibrate_lm, program_lm
+from repro.train.step import make_train_state, train_step_fn
+
+
+def main():
+    cfg = get_smoke_config("gemma-2b")
+    ds = SyntheticLM(cfg=cfg, seq_len=64, global_batch=8, seed=0)
+    state = make_train_state(cfg, jax.random.PRNGKey(0), lr=3e-3)
+    step = jax.jit(train_step_fn(cfg, lr=3e-3))
+    for i in range(120):
+        state, m = step(state, ds.batch(i))
+    print(f"trained tiny gemma-style LM to loss {float(m['loss']):.3f}")
+
+    batch = ds.batch(500)
+    designs = {
+        "A  diff/unsliced/analog-accum + SONOS": A.design_a(error=E.sonos()),
+        "A' diff/unsliced, no errors": A.design_a(),
+        "E  offset/2b/digital-accum + SONOS": A.design_e(error=E.sonos()),
+    }
+    from repro.train.step import loss_fn
+    dig = float(loss_fn(cfg, state.params, batch)[0])
+    print(f"digital eval loss: {dig:.4f}")
+    for name, spec in designs.items():
+        pack = program_lm(cfg, state.params, spec, jax.random.PRNGKey(7))
+        pack = calibrate_lm(cfg, state.params, pack, ds.batch(499)["tokens"])
+        al = float(analog_eval_loss(cfg, state.params, pack,
+                                    batch["tokens"], batch["targets"]))
+        print(f"{name:42s} analog loss {al:.4f} (delta {al-dig:+.4f})")
+
+    # greedy generation through the analog path
+    api = get_model(cfg)
+    pack = program_lm(cfg, state.params, A.design_a(error=E.sonos()),
+                      jax.random.PRNGKey(7))
+    pack = calibrate_lm(cfg, state.params, pack, ds.batch(499)["tokens"])
+    prompt = batch["tokens"][:1, :8]
+    logits, cache = api.prefill(cfg, state.params, prompt, max_len=32,
+                                pack=pack)
+    toks = []
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    for _ in range(8):
+        toks.append(int(tok[0, 0]))
+        logits, cache = api.decode_step(cfg, state.params, tok, cache,
+                                        pack=pack)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    print("analog greedy continuation:", toks)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""The paper's contribution: analog in-situ MVM accuracy simulation.
+
+Public API:
+
+* :class:`repro.core.analog.AnalogSpec` — one point in the design space
+  (mapping x errors x ADC x parasitics x array size).
+* :func:`repro.core.analog.program` — weights -> perturbed conductances.
+* :func:`repro.core.analog.analog_matmul` — simulated analog ``x @ W``.
+* :mod:`repro.core.calibrate` — activation/ADC range calibration.
+* :mod:`repro.core.energy` — core energy/area model (Table 3).
+"""
+
+from repro.core.adc import ADCConfig, adc_quantize, fpg_bits
+from repro.core.analog import (
+    AnalogSpec,
+    AnalogWeights,
+    analog_matmul,
+    design_a,
+    design_e,
+    program,
+)
+from repro.core.errors import (
+    ErrorModel,
+    sonos,
+    state_independent,
+    state_proportional,
+)
+from repro.core.mapping import MappingConfig, ProgrammedWeights, program_weights
+
+__all__ = [
+    "ADCConfig",
+    "AnalogSpec",
+    "AnalogWeights",
+    "ErrorModel",
+    "MappingConfig",
+    "ProgrammedWeights",
+    "adc_quantize",
+    "analog_matmul",
+    "design_a",
+    "design_e",
+    "fpg_bits",
+    "program",
+    "program_weights",
+    "sonos",
+    "state_independent",
+    "state_proportional",
+]

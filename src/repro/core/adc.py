@@ -1,0 +1,136 @@
+"""ADC models (paper Sec. 2.4, 6): Full Precision Guarantee vs. calibrated
+compressing ADCs.
+
+The analog output of one array (one slice, one K-partition, one input-bit
+group) is a *normalized* value ``V`` in units of ``G_max * V_in`` — i.e. the
+dot product of bit planes against normalized conductances.  The ADC clips
+``V`` to ``[lo, hi]`` and quantizes it to ``2**bits`` uniform levels; the
+digital value handed onward is the *dequantized* analog level (the periphery
+applies the known gain, Sec. 9.2's "tunable op-amp gain stage").
+
+Two resolution policies:
+
+* ``fpg_bits`` implements Eq. (4)/(5): a level for every possible output.
+  With the range set to the full analytic output range this reproduces the
+  integer dot product exactly in the error-free case (tested).
+* calibrated: ``bits`` fixed (typically 8) and ``[lo, hi]`` set from the
+  observed signal distribution (inner 99.98% range, Sec. 6.2), with
+  per-slice ranges constrained to powers of two of each other so that
+  shift-and-add aggregation needs no rescaling.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+#: fraction of probability mass kept inside the calibrated ADC range
+CALIB_COVERAGE = 0.9998
+
+
+def fpg_bits(weight_bits_per_cell: int, input_bits: int, n_rows: int) -> int:
+    """Eq. (4)/(5): ADC bits needed for a unique level per possible output."""
+    b_w, b_in = weight_bits_per_cell, input_bits
+    b_out = b_w + b_in + math.log2(n_rows)
+    if not (b_w > 1 and b_in > 1):
+        b_out -= 1
+    return math.ceil(b_out)
+
+
+@dataclasses.dataclass(frozen=True)
+class ADCConfig:
+    """Static ADC description.
+
+    ``style``:
+      * ``"none"``        — ideal (no quantization); used to isolate cell
+                            errors as in Sec. 5.
+      * ``"fpg"``         — resolution from Eq. (4), range = full analytic
+                            output range.
+      * ``"calibrated"``  — fixed ``bits``, range supplied at call time from
+                            the calibration pass.
+    """
+
+    style: str = "calibrated"
+    bits: int = 8
+
+    def __post_init__(self):
+        assert self.style in ("none", "fpg", "calibrated"), self.style
+
+
+def adc_quantize(
+    v: jax.Array,
+    lo: jax.Array,
+    hi: jax.Array,
+    bits: int,
+) -> jax.Array:
+    """Clip to ``[lo, hi]`` and quantize to ``2**bits`` uniform levels.
+
+    Returns the dequantized analog value of the chosen level.  Deterministic
+    (the paper treats ADC quantization as noiseless, Sec. 6.3).
+    """
+    n_levels = 2 ** bits
+    lsb = (hi - lo) / (n_levels - 1)
+    lsb = jnp.where(lsb <= 0, 1.0, lsb)  # degenerate range guard
+    code = jnp.clip(jnp.round((v - lo) / lsb), 0, n_levels - 1)
+    return lo + code * lsb
+
+
+def fpg_range(
+    n_rows: int,
+    max_code_g: float,
+    *,
+    signed_inputs: bool,
+    differential: bool,
+) -> Tuple[float, float]:
+    """Full analytic output range of one array in normalized units.
+
+    Each of ``n_rows`` cells contributes at most ``max_code_g`` (the
+    conductance of the top code) times an input-plane value in
+    {-1,0,1} (signed) or {0,1} (unsigned).  Differential subtraction makes
+    the output signed regardless of input polarity.
+    """
+    top = n_rows * max_code_g
+    if signed_inputs or differential:
+        return (-top, top)
+    return (0.0, top)
+
+
+def power_of_two_ranges(needs: jax.Array) -> jax.Array:
+    """Constrain per-slice range magnitudes to powers of two of the smallest.
+
+    ``needs``: positive per-slice required half-ranges, shape (S,).  Returns
+    granted half-ranges ``>= needs`` with ``granted[s] = base * 2**k_s``
+    (Sec. 6.2's shift-and-add compatibility constraint).
+    """
+    base = jnp.min(needs)
+    k = jnp.ceil(jnp.log2(jnp.maximum(needs / base, 1.0)))
+    return base * 2.0 ** k
+
+
+@dataclasses.dataclass(frozen=True)
+class CalibratedRange:
+    """Per-(layer, slice) ADC limits produced by the calibration pass."""
+
+    lo: jax.Array  # shape (n_slices,) or broadcastable
+    hi: jax.Array
+
+
+def range_from_samples(
+    v: jax.Array,
+    *,
+    coverage: float = CALIB_COVERAGE,
+    symmetric: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    """Inner-``coverage`` percentile range of observed pre-ADC values."""
+    tail = (1.0 - coverage) / 2.0 * 100.0
+    flat = v.reshape(-1)
+    lo = jnp.percentile(flat, tail)
+    hi = jnp.percentile(flat, 100.0 - tail)
+    if symmetric:
+        m = jnp.maximum(jnp.abs(lo), jnp.abs(hi))
+        return -m, m
+    return lo, hi

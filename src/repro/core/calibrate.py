@@ -1,0 +1,69 @@
+"""Range-calibration pipeline (paper Sec. 4.3, 6.2).
+
+Two calibrated quantities:
+
+* **activation ranges** — per layer, L1-optimal clipping of the float
+  activations over a calibration set (``quant.calibrate_act_range``);
+* **ADC ranges** — per (layer, slice), the inner-99.98% percentile range of
+  the pre-ADC analog values, with per-slice ranges constrained to powers of
+  two of each other for shift-and-add compatibility.
+
+The model integration (``repro.models``) threads these dicts of stacked
+per-layer arrays through the forward pass; see ``repro.core.analog_ctx``.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import adc as adc_lib
+from repro.core.analog import AnalogSpec, AnalogWeights, analog_matmul
+from repro.core.quant import calibrate_act_range
+
+
+def constrain_power_of_two(lo: jax.Array, hi: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Apply Sec. 6.2's power-of-two constraint across the slice axis.
+
+    ``lo``/``hi``: per-slice limits, shape (S,).  The half-range of each
+    slice is rounded up to ``base * 2**k``; limits stay centered.
+    """
+    center = (lo + hi) / 2.0
+    half = jnp.maximum((hi - lo) / 2.0, 1e-12)
+    granted = adc_lib.power_of_two_ranges(half)
+    return center - granted, center + granted
+
+
+def calibrate_adc_for_matmul(
+    x_samples: jax.Array,
+    aw: AnalogWeights,
+    spec: AnalogSpec,
+    *,
+    act_hi: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Run the collect pass for a single matmul and derive ADC limits.
+
+    Returns ``(adc_lo, adc_hi)`` of shape (S,).  Unsliced mappings skip the
+    power-of-two constraint (Sec. 6.2: "with unsliced weights there is no
+    such constraint").
+    """
+    _, stats = analog_matmul(x_samples, aw, spec, act_hi=act_hi, collect=True)
+    lo, hi = stats[:, 0], stats[:, 1]
+    if spec.mapping.sliced:
+        lo, hi = constrain_power_of_two(lo, hi)
+    return lo, hi
+
+
+def calibrate_activations(
+    samples: jax.Array, bits: int = 8, *, signed: bool = True
+) -> jax.Array:
+    """L1-optimal activation clip magnitude for one layer."""
+    _, hi = calibrate_act_range(samples, bits, signed=signed)
+    return hi
+
+
+def merge_layer_stats(stats_stacked: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Merge per-layer stats stacked by a layer scan: (L, S, 2) -> ((L,S), (L,S))."""
+    return stats_stacked[..., 0], stats_stacked[..., 1]

@@ -1,0 +1,100 @@
+"""Cell programming-error models (paper Sec. 5.1, Fig. 7; Sec. 9.1, Fig. 20).
+
+All models perturb *normalized* conductances ``g = G / G_max`` with zero-mean
+Gaussian noise whose standard deviation depends on the model:
+
+* ``state_independent``:  sigma = alpha_ind            (fraction of G_max)
+* ``state_proportional``: sigma = alpha_prop * g
+* ``sonos``:              sigma(g) = sat * (1 - exp(-g / knee)) — the
+  saturating-exponential fit to the measured SONOS distributions in
+  Fig. 20(b): state-proportional with slope ~6% below ~0.3*G_max,
+  saturating near 0.031*G_max above ~0.5*G_max (I_max = 1.6 uA).
+
+Errors are *program-time*: sampled once per programmed chip from an explicit
+PRNG key, then frozen.  The paper's "10 trials" become 10 vmapped keys.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+# SONOS fit constants (normalized to I_max = 1.6 uA).  sigma(I) in Fig. 20(b)
+# is ~6% proportional below 0.5 uA and saturates around 0.05 uA at high
+# current: sat * (1 - exp(-I/knee)) with sat = 0.05/1.6, knee chosen so the
+# small-signal slope sat/knee = 0.06.
+SONOS_SAT = 0.05 / 1.6
+SONOS_KNEE = SONOS_SAT / 0.06
+SONOS_ALPHA_PROP = 0.06
+SONOS_ON_OFF = 1.0e4
+
+
+@dataclasses.dataclass(frozen=True)
+class ErrorModel:
+    """Parameterized cell-error model; ``kind = 'none'`` disables it.
+
+    ``clip_at_zero``: the paper's Fig. 7 models are *symmetric* Gaussians
+    (its Fig. 8(a) shows fine slicing slightly HELPING under
+    state-independent error, which only holds without rectification).
+    Physical conductance cannot go negative; enabling the clip adds the
+    half-Gaussian bias of real zero-state cells.  Default False = the
+    paper's model; state-proportional/SONOS errors vanish at g=0 anyway,
+    so the flag only matters for state-independent sweeps.
+    """
+
+    kind: str = "none"          # none | state_independent | state_proportional | sonos
+    alpha: float = 0.0          # alpha_ind or alpha_prop (fractions, not %)
+    clip_at_zero: bool = False
+
+    def __post_init__(self):
+        assert self.kind in (
+            "none",
+            "state_independent",
+            "state_proportional",
+            "sonos",
+        ), self.kind
+
+    def sigma(self, g: jax.Array) -> jax.Array:
+        """Std-dev of the programming error at conductance ``g``."""
+        if self.kind == "none":
+            return jnp.zeros_like(g)
+        if self.kind == "state_independent":
+            return jnp.full_like(g, self.alpha)
+        if self.kind == "state_proportional":
+            return self.alpha * g
+        # sonos
+        return SONOS_SAT * (1.0 - jnp.exp(-g / SONOS_KNEE))
+
+    def perturb(self, g: jax.Array, key: Optional[jax.Array]) -> jax.Array:
+        """Sample programmed conductances around their targets.
+
+        Conductances are clipped below at 0 (a memory cell cannot have
+        negative conductance); no upper clip, matching the measured
+        distributions which overshoot G_max slightly.
+        """
+        if self.kind == "none" or key is None:
+            return g
+        noise = jax.random.normal(key, g.shape, dtype=g.dtype)
+        out = g + self.sigma(g) * noise
+        if self.clip_at_zero:
+            out = jnp.maximum(out, 0.0)
+        return out
+
+
+def state_independent(alpha: float) -> ErrorModel:
+    return ErrorModel(kind="state_independent", alpha=alpha)
+
+
+def state_proportional(alpha: float) -> ErrorModel:
+    return ErrorModel(kind="state_proportional", alpha=alpha)
+
+
+def sonos() -> ErrorModel:
+    return ErrorModel(kind="sonos")
+
+
+def none() -> ErrorModel:
+    return ErrorModel(kind="none")

@@ -1,0 +1,230 @@
+"""Weight -> conductance mapping schemes (paper Sec. 2.1, 2.3, 4.1, Fig. 4).
+
+Two axes of the design space:
+
+* **Negative-number handling**: ``offset`` subtraction (Eq. 2/7) versus
+  ``differential`` cell pairs (Eq. 3/8).
+* **Precision encoding**: *bit slicing* (1/2/4 bits per cell, shift-and-add
+  reduction) versus *unsliced* weights (one multi-bit "approximate memory"
+  cell per weight, Fig. 2b).
+
+All conductances here are **normalized**: ``g = G / G_max`` in ``[0, 1]``.
+A finite On/Off ratio maps the code range onto ``[g_min, 1]`` with
+``g_min = 1 / on_off_ratio`` — crucially the *affine* part of that map is
+known to the digital periphery and corrected exactly, so in the error-free
+limit every scheme reproduces the integer dot product bit-exactly (the
+paper's "functionally equivalent in the absence of analog errors").
+
+Integer conventions (see quant.py):
+
+* offset:       w_int in [-(2**(B-1)-1), 2**(B-1)-1]; W_prog = w_int + 2**(B-1)
+* differential: w_int in [-(2**M - 1), 2**M - 1] with M magnitude bits;
+                M = B - 1 unsliced, M = bpc * ceil((B-1)/bpc) rounded up to
+                fully use the sliced range (the paper's 9-bit sliced case).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class MappingConfig:
+    """Static description of one point in the mapping design space."""
+
+    scheme: str = "differential"          # "differential" | "offset"
+    weight_bits: int = 8                  # signed weight precision B
+    bits_per_cell: Optional[int] = None   # None => unsliced
+    on_off_ratio: float = float("inf")    # G_max / G_min
+    unit_column: bool = False             # analog offset column (offset only)
+
+    def __post_init__(self):
+        assert self.scheme in ("differential", "offset"), self.scheme
+        if self.bits_per_cell is not None:
+            assert self.bits_per_cell in (1, 2, 4, 8), self.bits_per_cell
+        if self.unit_column:
+            assert self.scheme == "offset", "unit column only applies to offset"
+
+    # ---- derived static properties -------------------------------------
+    @property
+    def sliced(self) -> bool:
+        return self.bits_per_cell is not None
+
+    @property
+    def cell_bits(self) -> int:
+        """Bits stored per memory cell."""
+        if self.sliced:
+            return self.bits_per_cell
+        # Unsliced: offset needs the full B bits in one cell; differential
+        # stores the magnitude (B-1 bits).
+        return self.weight_bits if self.scheme == "offset" else self.weight_bits - 1
+
+    @property
+    def n_slices(self) -> int:
+        if not self.sliced:
+            return 1
+        total = self.weight_bits if self.scheme == "offset" else self.weight_bits - 1
+        return math.ceil(total / self.bits_per_cell)
+
+    @property
+    def magnitude_bits(self) -> int:
+        """Total magnitude bits represented (differential) or total bits
+        (offset)."""
+        if self.scheme == "offset":
+            return self.n_slices * self.cell_bits if self.sliced else self.weight_bits
+        return self.n_slices * self.cell_bits if self.sliced else self.weight_bits - 1
+
+    @property
+    def levels_per_cell(self) -> int:
+        return 2 ** self.cell_bits
+
+    @property
+    def g_min(self) -> float:
+        return 0.0 if math.isinf(self.on_off_ratio) else 1.0 / self.on_off_ratio
+
+    @property
+    def cells_per_weight(self) -> int:
+        return self.n_slices * (2 if self.scheme == "differential" else 1)
+
+    @property
+    def offset_code(self) -> int:
+        """Code added to w_int under offset subtraction (2**(B-1))."""
+        return 2 ** (self.weight_bits - 1)
+
+
+# ---------------------------------------------------------------------------
+# bit slicing
+# ---------------------------------------------------------------------------
+
+def slice_codes(codes: jax.Array, bits_per_cell: int, n_slices: int) -> jax.Array:
+    """Split non-negative integer-valued ``codes`` into ``n_slices`` slices of
+    ``bits_per_cell`` bits, least-significant slice first.
+
+    Returns shape ``(n_slices,) + codes.shape`` with
+    ``sum_s 2**(bpc*s) * slices[s] == codes``.
+    """
+    c = codes.astype(jnp.int32)
+    mask = (1 << bits_per_cell) - 1
+    out = []
+    for s in range(n_slices):
+        out.append(((c >> (bits_per_cell * s)) & mask).astype(codes.dtype))
+    return jnp.stack(out, axis=0)
+
+
+def unslice_codes(slices: jax.Array, bits_per_cell: int) -> jax.Array:
+    """Inverse of :func:`slice_codes` (shift-and-add reduction)."""
+    n_slices = slices.shape[0]
+    weights = jnp.array(
+        [2.0 ** (bits_per_cell * s) for s in range(n_slices)], slices.dtype
+    )
+    return jnp.tensordot(weights, slices, axes=1)
+
+
+# ---------------------------------------------------------------------------
+# code -> conductance
+# ---------------------------------------------------------------------------
+
+def codes_to_conductance(codes: jax.Array, cfg: MappingConfig) -> jax.Array:
+    """Map integer cell codes in ``[0, L-1]`` to normalized conductances.
+
+    ``g = g_min + (1 - g_min) * code / (L - 1)`` — a linear (proportional
+    when ``g_min = 0``) map, Fig. 4.
+    """
+    lmax = cfg.levels_per_cell - 1
+    return cfg.g_min + (1.0 - cfg.g_min) * codes / lmax
+
+
+def conductance_to_codes(g: jax.Array, cfg: MappingConfig) -> jax.Array:
+    """Exact affine inverse of :func:`codes_to_conductance` (the digital
+    periphery knows the programmed transfer curve)."""
+    lmax = cfg.levels_per_cell - 1
+    return (g - cfg.g_min) * lmax / (1.0 - cfg.g_min)
+
+
+# ---------------------------------------------------------------------------
+# weight integer -> programmed conductance stacks
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ProgrammedWeights:
+    """Conductance stacks for one weight matrix.
+
+    ``g_pos`` has shape ``(n_slices, K, N)``.  For differential mappings
+    ``g_neg`` holds the negative-magnitude lines; for offset mappings
+    ``g_neg is None`` and ``g_unit`` optionally holds the unit column
+    ``(n_slices, K, 1)``.
+    """
+
+    g_pos: jax.Array
+    g_neg: Optional[jax.Array]
+    g_unit: Optional[jax.Array]
+
+
+def program_weights(w_int: jax.Array, cfg: MappingConfig) -> ProgrammedWeights:
+    """Map signed integer weights to conductance stacks (error-free)."""
+    if cfg.scheme == "offset":
+        prog = w_int + cfg.offset_code                       # strictly >= 0
+        slices = (
+            slice_codes(prog, cfg.cell_bits, cfg.n_slices)
+            if cfg.sliced
+            else prog[None]
+        )
+        g_pos = codes_to_conductance(slices, cfg)
+        g_unit = None
+        if cfg.unit_column:
+            unit_codes = slice_codes(
+                jnp.full((w_int.shape[0], 1), cfg.offset_code, jnp.int32),
+                cfg.cell_bits,
+                cfg.n_slices,
+            ) if cfg.sliced else jnp.full(
+                (1, w_int.shape[0], 1), cfg.offset_code, jnp.int32
+            )
+            g_unit = codes_to_conductance(unit_codes, cfg)
+        return ProgrammedWeights(g_pos=g_pos, g_neg=None, g_unit=g_unit)
+
+    # differential: sign-magnitude; one line of each pair stays at code 0.
+    mag = jnp.abs(w_int)
+    pos = jnp.where(w_int > 0, mag, 0)
+    neg = jnp.where(w_int < 0, mag, 0)
+    if cfg.sliced:
+        sp = slice_codes(pos, cfg.cell_bits, cfg.n_slices)
+        sn = slice_codes(neg, cfg.cell_bits, cfg.n_slices)
+    else:
+        sp, sn = pos[None], neg[None]
+    return ProgrammedWeights(
+        g_pos=codes_to_conductance(sp, cfg),
+        g_neg=codes_to_conductance(sn, cfg),
+        g_unit=None,
+    )
+
+
+def reconstruct_weights(pw: ProgrammedWeights, cfg: MappingConfig) -> jax.Array:
+    """Recover signed integer weights from (possibly perturbed) conductances.
+
+    Used by tests to prove the error-free round trip is exact, and by the
+    accuracy model as the *ideal* decoder the digital periphery implements.
+    """
+    cp = conductance_to_codes(pw.g_pos, cfg)
+    if cfg.scheme == "offset":
+        codes = unslice_codes(cp, cfg.cell_bits) if cfg.sliced else cp[0]
+        return codes - cfg.offset_code
+    cn = conductance_to_codes(pw.g_neg, cfg)
+    if cfg.sliced:
+        return unslice_codes(cp, cfg.cell_bits) - unslice_codes(cn, cfg.cell_bits)
+    return cp[0] - cn[0]
+
+
+def average_conductance(pw: ProgrammedWeights) -> jax.Array:
+    """Per-slice mean normalized conductance (paper Fig. 6)."""
+    gs = [pw.g_pos] + ([pw.g_neg] if pw.g_neg is not None else [])
+    stacked = jnp.concatenate([g.reshape(g.shape[0], -1) for g in gs], axis=-1)
+    return jnp.mean(stacked, axis=-1)
+
+
+def slice_weights_float() -> None:  # pragma: no cover - placeholder guard
+    raise NotImplementedError

@@ -1,0 +1,101 @@
+"""Bit-line parasitic resistance model (paper Sec. 8, Fig. 19).
+
+Circuit (Fig. 19(a)/(b)): every cell is a linear resistor of normalized
+conductance ``g`` from the supply (``V_D = 1``, low-impedance power grid) to
+its bit-line node, gated by the input bit.  Adjacent bit-line nodes are
+separated by the normalized parasitic resistance ``r = R_p * G_max`` and the
+bottom node is held at virtual ground by the column periphery.  Signed
+inputs drive opposite-polarity supplies (Marinella et al. [43]), i.e. the
+cell sources current toward ``s in {-1, +1}``.
+
+KCL at node ``i`` (0 = top, K-1 = bottom, v_K = 0)::
+
+    (v_{i-1} - v_i)/r * [i>0] + (v_{i+1} - v_i)/r + a_i g_i (s_i - v_i) = 0
+
+with ``a_i = |x_i|`` the gate bit.  This is a symmetric positive-definite
+tridiagonal system; we solve it with the Thomas algorithm via two
+``lax.scan`` passes, vectorized over (batch, columns).  The column output
+current is the current through the bottom segment, ``I = v_{K-1} / r``; by
+Kirchhoff it equals the sum of injected cell currents (tested).
+
+In the ideal limit ``r -> 0`` this reduces to ``I = sum_i x_i g_i`` — the
+errors the paper studies are exactly the deviation from that.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def bitline_currents(
+    g: jax.Array,        # (K, N) normalized conductances of one line stack
+    x: jax.Array,        # (M, K) signed input plane, values in {-1, 0, +1}
+    r_hat: float,        # normalized parasitic resistance R_p * G_max
+) -> jax.Array:
+    """Output currents (M, N) of N bit lines under parasitic resistance."""
+    if r_hat == 0.0:
+        return x @ g
+
+    a = jnp.abs(x)                                     # gate bits   (M, K)
+    s = x                                              # signed source (M, K)
+    k = g.shape[0]
+
+    # Per-(sample, row, column) effective quantities.
+    gr = a[:, :, None] * g[None, :, :] * r_hat         # (M, K, N) = a*g*r
+    rhs = s[:, :, None] * g[None, :, :] * r_hat        # source term * r
+
+    # Tridiagonal coefficients: -v_{i-1} + b_i v_i - v_{i+1} = rhs_i
+    # b_0 = 1 + gr_0 (no neighbor above); b_i = 2 + gr_i otherwise.
+    b = 2.0 + gr
+    b = b.at[:, 0, :].set(1.0 + gr[:, 0, :])
+
+    # Thomas forward sweep over rows: a_i = c_i = -1 (c_{K-1} = 0 handled by
+    # the back-substitution never using it).
+    def fwd(carry, inp):
+        c_prev, d_prev = carry
+        b_i, d_i = inp
+        denom = b_i + c_prev                 # b_i - a_i * c'_{i-1}, a_i = -1
+        c_new = -1.0 / denom
+        d_new = (d_i + d_prev) / denom       # (d_i - a_i * d'_{i-1}) / denom
+        return (c_new, d_new), (c_new, d_new)
+
+    zeros = jnp.zeros(b.shape[::2], b.dtype)  # (M, N)
+    b_t = jnp.moveaxis(b, 1, 0)               # (K, M, N)
+    rhs_t = jnp.moveaxis(rhs, 1, 0)
+    # First row has no "previous": seed with c_prev = 0, d_prev = 0.
+    (_, v_last), _ = lax.scan(fwd, (zeros, zeros), (b_t, rhs_t))
+
+    # The output only needs the bottom-node voltage: the current through the
+    # bottom segment is the full column current (Kirchhoff).  d'_{K-1} IS
+    # v_{K-1} since c_{K-1} = 0 in back-substitution.
+    del k
+    return v_last / r_hat
+
+
+def bitline_voltages_dense(
+    g_col: jax.Array,    # (K,) conductances of a single column
+    x: jax.Array,        # (K,) signed plane
+    r_hat: float,
+) -> jax.Array:
+    """Dense ``jnp.linalg.solve`` oracle for tests (single column)."""
+    k = g_col.shape[0]
+    a = jnp.abs(x)
+    gr = a * g_col * r_hat
+    diag = 2.0 + gr
+    diag = diag.at[0].set(1.0 + gr[0])
+    mat = (
+        jnp.diag(diag)
+        - jnp.diag(jnp.ones(k - 1), 1)
+        - jnp.diag(jnp.ones(k - 1), -1)
+    )
+    rhs = x * g_col * r_hat
+    return jnp.linalg.solve(mat, rhs)
+
+
+def injected_current(
+    g_col: jax.Array, x: jax.Array, v: jax.Array
+) -> jax.Array:
+    """Sum of cell currents given node voltages (Kirchhoff check)."""
+    return jnp.sum(jnp.abs(x) * g_col * (jnp.sign(x) - v) * (jnp.abs(x) > 0))

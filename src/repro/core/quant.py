@@ -1,0 +1,176 @@
+"""Integer quantization used on both sides of the analog MVM.
+
+The paper (Sec. 4.3) quantizes weights to 8 bits before mapping them to
+conductances, and activations to 8 bits during inference with a calibrated
+clipping range found by minimizing an L1 reconstruction error over a
+calibration set.  This module implements both, plus the bit-plane
+decomposition used for input bit slicing (Sec. 2.2).
+
+Conventions
+-----------
+* ``weight_bits = B`` means signed integers.  For *offset subtraction* the
+  usable range is ``[-(2**(B-1)), 2**(B-1)-1]`` but we quantize symmetrically
+  to ``[-(2**(B-1)-1), 2**(B-1)-1]`` so that zero is exactly representable
+  and the offset algebra stays symmetric.
+* For *differential* mappings the magnitude is what gets programmed, so a
+  ``magnitude_bits = M`` cell pair represents ``[-(2**M-1), 2**M-1]``.
+* Activations may be signed (LM residual streams) or unsigned (post-ReLU
+  CNNs, the paper's case).  Signed inputs are modelled as opposite-polarity
+  input voltages (Marinella et al. [43]): bit planes carry values in
+  ``{-1, 0, +1}``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def qmax_signed(bits: int) -> int:
+    """Largest magnitude representable by a signed ``bits``-bit integer
+    under symmetric quantization."""
+    return 2 ** (bits - 1) - 1
+
+
+def qmax_unsigned(bits: int) -> int:
+    return 2 ** bits - 1
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantizedTensor:
+    """An integer tensor together with its dequantization scale.
+
+    ``values`` is stored as float (integer-valued) so it can feed the MXU
+    directly; ``dequant = values * scale``.
+    """
+
+    values: jax.Array          # integer-valued float array
+    scale: jax.Array           # scalar or per-axis scale
+    bits: int
+    signed: bool
+
+    def dequant(self) -> jax.Array:
+        return self.values * self.scale
+
+
+def quantize_weights(
+    w: jax.Array,
+    bits: int = 8,
+    *,
+    magnitude_bits: Optional[int] = None,
+    per_channel: bool = False,
+    eps: float = 1e-12,
+) -> QuantizedTensor:
+    """Symmetric signed quantization of a weight matrix.
+
+    ``magnitude_bits`` overrides the integer range: the paper's sliced
+    differential scheme represents ``magnitude_bits = 8`` (9-bit signed
+    weights) while unsliced differential uses 7 magnitude bits (8-bit
+    signed).  When ``None``, ``bits - 1`` magnitude bits are used.
+    """
+    m = (bits - 1) if magnitude_bits is None else magnitude_bits
+    qmax = 2 ** m - 1
+    if per_channel:
+        absmax = jnp.max(jnp.abs(w), axis=0, keepdims=True)
+    else:
+        absmax = jnp.max(jnp.abs(w))
+    scale = jnp.maximum(absmax, eps) / qmax
+    w_int = jnp.clip(jnp.round(w / scale), -qmax, qmax)
+    return QuantizedTensor(values=w_int, scale=scale, bits=m + 1, signed=True)
+
+
+def quantize_acts(
+    x: jax.Array,
+    bits: int = 8,
+    *,
+    signed: bool = True,
+    clip_lo: Optional[jax.Array] = None,
+    clip_hi: Optional[jax.Array] = None,
+    eps: float = 1e-12,
+) -> QuantizedTensor:
+    """Quantize activations to ``bits`` with an optional calibrated range.
+
+    Signed activations use symmetric quantization around zero (so that the
+    sign/magnitude bit-plane decomposition below is exact); unsigned use
+    the range ``[0, clip_hi]``.
+    """
+    if signed:
+        if clip_hi is None:
+            absmax = jnp.max(jnp.abs(x))
+        else:
+            hi = jnp.asarray(clip_hi)
+            lo = -hi if clip_lo is None else jnp.asarray(clip_lo)
+            absmax = jnp.maximum(jnp.abs(lo), jnp.abs(hi))
+        qmax = 2 ** (bits - 1) - 1
+        scale = jnp.maximum(absmax, eps) / qmax
+        x_int = jnp.clip(jnp.round(x / scale), -qmax, qmax)
+        return QuantizedTensor(values=x_int, scale=scale, bits=bits, signed=True)
+    hi = jnp.max(x) if clip_hi is None else jnp.asarray(clip_hi)
+    qmax = 2 ** bits - 1
+    scale = jnp.maximum(hi, eps) / qmax
+    x_int = jnp.clip(jnp.round(x / scale), 0, qmax)
+    return QuantizedTensor(values=x_int, scale=scale, bits=bits, signed=False)
+
+
+def calibrate_act_range(
+    samples: jax.Array,
+    bits: int = 8,
+    *,
+    signed: bool = True,
+    search_bits: int = 12,
+) -> Tuple[jax.Array, jax.Array]:
+    """Find the clipping range minimizing the L1 quantization error.
+
+    Mirrors Sec. 4.3: candidate ranges are swept on a grid of ``2**search_bits``
+    resolution (the paper's ``M = 12``) and the L1-optimal clip is chosen.
+    Returns ``(lo, hi)``; for signed data the range is symmetric.
+    """
+    flat = samples.reshape(-1)
+    absmax = jnp.maximum(jnp.max(jnp.abs(flat)), 1e-12)
+    # Sweep 32 candidate clip points between absmax/2**6 and absmax on the
+    # search grid, picking the L1-optimal one.  (An exhaustive 2**12 sweep is
+    # needless: the L1 error is smooth in the clip value.)
+    n_cand = 32
+    fracs = jnp.exp(jnp.linspace(jnp.log(2.0 ** -6), 0.0, n_cand))
+    cands = absmax * fracs
+    grid = 2.0 ** search_bits
+
+    def l1_err(hi):
+        hi = jnp.round(hi / absmax * grid) / grid * absmax  # snap to M-bit grid
+        q = quantize_acts(flat, bits, signed=signed, clip_hi=hi)
+        return jnp.sum(jnp.abs(q.dequant() - flat))
+
+    errs = jax.vmap(l1_err)(cands)
+    best = cands[jnp.argmin(errs)]
+    if signed:
+        return -best, best
+    return jnp.zeros_like(best), best
+
+
+def bit_planes(x_int: jax.Array, n_planes: int, *, signed: bool = True) -> jax.Array:
+    """Decompose integer-valued ``x_int`` into bit planes.
+
+    Returns an array of shape ``(n_planes,) + x_int.shape`` such that
+    ``sum_b 2**b * planes[b] == x_int`` exactly.  For signed inputs the
+    planes are the magnitude bits multiplied by ``sign(x)`` (values in
+    ``{-1, 0, +1}``), modelling opposite-polarity input voltages.
+    """
+    if signed:
+        sign = jnp.sign(x_int)
+        mag = jnp.abs(x_int)
+    else:
+        sign = jnp.ones_like(x_int)
+        mag = x_int
+    mag = mag.astype(jnp.int32)
+    planes = []
+    for b in range(n_planes):
+        planes.append(((mag >> b) & 1).astype(x_int.dtype) * sign)
+    return jnp.stack(planes, axis=0)
+
+
+def n_input_planes(input_bits: int, signed: bool) -> int:
+    """Number of magnitude bit planes for an ``input_bits`` quantizer."""
+    return input_bits - 1 if signed else input_bits

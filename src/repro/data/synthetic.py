@@ -1,0 +1,70 @@
+"""Deterministic synthetic data pipeline.
+
+Every batch is a pure function of ``(seed, step)`` — the property the fault
+tolerance story rests on: restart at step *k* replays exactly the batches a
+failed run would have seen, with no iterator state beyond the step index.
+Sharding: each (pod, data) shard slices its rows of the global batch by
+index, so the same function serves 1 or 512 processes.
+
+Two token streams:
+
+* ``lm``: an affine-congruential token process with noise — enough
+  structure that a few hundred training steps measurably reduce loss
+  (used by the end-to-end example), fully vocabulary-general.
+* ``uniform``: i.i.d. tokens (throughput benchmarking).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, ShapeConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class SyntheticLM:
+    cfg: ModelConfig
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    mode: str = "lm"            # "lm" | "uniform"
+    noise: float = 0.1
+
+    def batch(self, step) -> Dict[str, jax.Array]:
+        """Global batch for ``step`` (host-shardable by row)."""
+        key = jax.random.fold_in(jax.random.PRNGKey(self.seed), step)
+        b, s, v = self.global_batch, self.seq_len, self.cfg.vocab
+        if self.mode == "uniform":
+            tokens = jax.random.randint(key, (b, s), 0, v)
+        else:
+            k1, k2, k3 = jax.random.split(key, 3)
+            start = jax.random.randint(k1, (b, 1), 0, v)
+            mult = 31 + 2 * jax.random.randint(k2, (b, 1), 0, 8)
+            idx = jnp.arange(s)[None, :]
+            tokens = (start + mult * idx) % v
+            noise_mask = jax.random.uniform(k3, (b, s)) < self.noise
+            rand = jax.random.randint(jax.random.fold_in(k3, 1), (b, s), 0, v)
+            tokens = jnp.where(noise_mask, rand, tokens)
+        tokens = tokens.astype(jnp.int32)
+        targets = jnp.roll(tokens, -1, axis=1)
+        out = {"tokens": tokens, "targets": targets}
+        if self.cfg.frontend:
+            kf = jax.random.fold_in(key, 7)
+            out["prefix_embeds"] = 0.02 * jax.random.normal(
+                kf, (b, self.cfg.n_frontend_tokens, self.cfg.d_model),
+                jnp.float32)
+        return out
+
+    def state(self, step: int) -> dict:
+        """Checkpointable pipeline state — the step index is everything."""
+        return {"seed": self.seed, "step": int(step), "mode": self.mode}
+
+
+def for_shape(cfg: ModelConfig, shape: ShapeConfig, seed: int = 0,
+              mode: str = "lm") -> SyntheticLM:
+    return SyntheticLM(cfg=cfg, seq_len=shape.seq_len,
+                       global_batch=shape.global_batch, seed=seed, mode=mode)

@@ -1,0 +1,122 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+Handles MXU-alignment padding (M/N to tile multiples), backend selection
+(``interpret=True`` on CPU — the container's validation mode — and compiled
+Mosaic on TPU), and the squeeze/reshape glue to/from the shapes used by
+``repro.core.analog``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import analog_mvm as _k_mvm
+from repro.kernels import bitline as _k_bl
+
+
+def _use_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def _pick_tile(size: int, pref: int) -> int:
+    """Largest tile <= pref that keeps padding waste < 2x for tiny sizes."""
+    if size >= pref:
+        return pref
+    # round size up to the next multiple of 8 (sublane) as the tile
+    return max(8, int(-(-size // 8) * 8))
+
+
+def analog_mvm(
+    x_parts: jax.Array,      # (M, P, rows)
+    g_pos: jax.Array,        # (S=1, P, rows, N) or (P, rows, N)
+    g_neg: jax.Array,
+    *,
+    adc_lo: jax.Array,
+    adc_hi: jax.Array,
+    adc_bits: int,
+    gain: float,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Design-A fused analog MVM; returns (M, N) in code units."""
+    if g_pos.ndim == 4:
+        g_pos, g_neg = g_pos[0], g_neg[0]
+    interpret = _use_interpret() if interpret is None else interpret
+    m, p, rows = x_parts.shape
+    n = g_pos.shape[-1]
+    bm = _pick_tile(m, 128)
+    bn = _pick_tile(n, 128)
+    xp = _pad_to(x_parts.astype(jnp.float32), 0, bm)
+    gp = _pad_to(g_pos.astype(jnp.float32), 2, bn)
+    gm = _pad_to(g_neg.astype(jnp.float32), 2, bn)
+    out = _k_mvm.analog_mvm_diff_pallas(
+        xp, gp, gm,
+        jnp.asarray(adc_lo), jnp.asarray(adc_hi),
+        adc_bits=adc_bits, gain=float(gain),
+        bm=bm, bn=bn, interpret=interpret,
+    )
+    return out[:m, :n]
+
+
+def analog_mvm_bitserial(
+    x_parts: jax.Array,
+    g_pos: jax.Array,
+    g_neg: jax.Array,
+    *,
+    n_bits: int,
+    adc_lo: jax.Array,
+    adc_hi: jax.Array,
+    adc_bits: int,
+    gain: float,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Design-D fused bit-serial analog MVM; returns (M, N) code units."""
+    if g_pos.ndim == 4:
+        g_pos, g_neg = g_pos[0], g_neg[0]
+    interpret = _use_interpret() if interpret is None else interpret
+    m, p, rows = x_parts.shape
+    n = g_pos.shape[-1]
+    bm = _pick_tile(m, 128)
+    bn = _pick_tile(n, 128)
+    xp = _pad_to(x_parts.astype(jnp.float32), 0, bm)
+    gp = _pad_to(g_pos.astype(jnp.float32), 2, bn)
+    gm = _pad_to(g_neg.astype(jnp.float32), 2, bn)
+    out = _k_mvm.analog_mvm_bitserial_pallas(
+        xp, gp, gm,
+        jnp.asarray(adc_lo), jnp.asarray(adc_hi),
+        n_bits=n_bits, adc_bits=adc_bits, gain=float(gain),
+        bm=bm, bn=bn, interpret=interpret,
+    )
+    return out[:m, :n]
+
+
+def bitline_mvm(
+    g: jax.Array,            # (K, N)
+    x: jax.Array,            # (M, K) signed plane
+    r_hat: float,
+    *,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Parasitic bit-line MVM; returns output currents (M, N)."""
+    interpret = _use_interpret() if interpret is None else interpret
+    m, k = x.shape
+    n = g.shape[1]
+    bm = _pick_tile(m, 128)
+    bn = _pick_tile(n, 128)
+    xp = _pad_to(x.astype(jnp.float32), 0, bm)
+    gp = _pad_to(g.astype(jnp.float32), 1, bn)
+    out = _k_bl.bitline_mvm_pallas(gp, xp, float(r_hat), bm=bm, bn=bn,
+                                   interpret=interpret)
+    return out[:m, :n]

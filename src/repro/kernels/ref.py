@@ -1,0 +1,83 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the ground truth the kernels are tested against
+(``assert_allclose`` over shape/dtype sweeps) and what the accuracy model
+in ``repro.core.analog`` reduces to on the matching design points.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def adc(v: jax.Array, lo, hi, bits: int) -> jax.Array:
+    """Uniform clip+quantize, dequantized levels (see core.adc)."""
+    n_levels = 2 ** bits
+    lsb = (hi - lo) / (n_levels - 1)
+    code = jnp.clip(jnp.round((v - lo) / lsb), 0, n_levels - 1)
+    return lo + code * lsb
+
+
+def analog_mvm_diff(
+    x_parts: jax.Array,   # (M, P, rows) integer-valued
+    g_pos: jax.Array,     # (P, rows, N)
+    g_neg: jax.Array,     # (P, rows, N)
+    *,
+    adc_lo,
+    adc_hi,
+    adc_bits: int,
+    gain: float,
+) -> jax.Array:
+    """Design-A path: differential, unsliced, analog input accumulation.
+
+    Per K-partition: analog dot product, analog differential subtraction,
+    one ADC conversion, then digital accumulation over partitions in code
+    units (x ``gain``).  Output (M, N), code units.
+    """
+    v = jnp.einsum("mpr,prn->pmn", x_parts, g_pos - g_neg,
+                   precision=jax.lax.Precision.HIGHEST)
+    v_hat = adc(v, adc_lo, adc_hi, adc_bits)
+    return jnp.sum(v_hat, axis=0) * gain
+
+
+def analog_mvm_bitserial(
+    x_parts: jax.Array,   # (M, P, rows) integer-valued, signed
+    g_pos: jax.Array,     # (P, rows, N)
+    g_neg: jax.Array,     # (P, rows, N)
+    *,
+    n_bits: int,
+    adc_lo,
+    adc_hi,
+    adc_bits: int,
+    gain: float,
+) -> jax.Array:
+    """Design-D path: differential, unsliced, *digital* input accumulation.
+
+    Every input bit plane is digitized separately and aggregated by digital
+    shift-and-add.  The oracle materializes all bit planes; the kernel
+    extracts them in VMEM.
+    """
+    sign = jnp.sign(x_parts)
+    mag = jnp.abs(x_parts).astype(jnp.int32)
+    acc = None
+    g = g_pos - g_neg
+    for b in range(n_bits):
+        plane = (((mag >> b) & 1).astype(x_parts.dtype)) * sign
+        v = jnp.einsum("mpr,prn->pmn", plane, g,
+                       precision=jax.lax.Precision.HIGHEST)
+        v_hat = adc(v, adc_lo, adc_hi, adc_bits)
+        contrib = jnp.sum(v_hat, axis=0) * (2.0 ** b)
+        acc = contrib if acc is None else acc + contrib
+    return acc * gain
+
+
+def bitline_mvm(
+    g: jax.Array,     # (K, N)
+    x: jax.Array,     # (M, K) signed plane in {-1, 0, +1}
+    r_hat: float,
+) -> jax.Array:
+    """Parasitic bit-line currents; delegates to the core Thomas solver."""
+    from repro.core.parasitics import bitline_currents
+
+    return bitline_currents(g, x, r_hat)

@@ -1,0 +1,181 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape x
+mesh) cell against the production mesh, with no device allocation
+(ShapeDtypeStruct inputs), and record memory/cost/collective statistics.
+
+The two lines above MUST stay first: jax locks the device count on first
+backend initialization.
+
+Usage::
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch gemma-2b \
+        --shape train_4k [--multi-pod] [--analog]
+    PYTHONPATH=src python -m repro.launch.dryrun --all   # resumable sweep
+
+Results land in dryrun_results/<arch>__<shape>__<mesh>.json; existing files
+are skipped (the sweep is resumable / parallelizable across invocations).
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.config import SHAPES
+from repro.configs import ARCH_IDS, get_config
+from repro.launch import hlo_stats
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_step, default_microbatches
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "dryrun_results")
+
+
+def should_skip(cfg, shape) -> str:
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return ("pure full-attention architecture: long_500k requires "
+                "sub-quadratic attention (DESIGN.md skip table)")
+    return ""
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             microbatches=None, variant: str = "baseline") -> dict:
+    from repro.sharding import perf
+
+    with perf.variant(variant):
+        return _run_cell_inner(arch, shape_name, multi_pod=multi_pod,
+                               microbatches=microbatches, variant=variant)
+
+
+def _run_cell_inner(arch: str, shape_name: str, *, multi_pod: bool,
+                    microbatches=None, variant: str = "baseline") -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    skip = should_skip(cfg, shape)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    meta = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "variant": variant,
+        "kind": shape.kind,
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+        "seq_len": shape.seq_len, "global_batch": shape.global_batch,
+    }
+    if skip:
+        return {**meta, "skipped": skip}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.size
+    t0 = time.time()
+    with mesh:
+        jitted, structs = build_step(cfg, mesh, shape,
+                                     **({} if shape.kind != "train" else
+                                        {"microbatches": microbatches}))
+        lowered = jitted.lower(*structs)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    mem_d = {}
+    for attr in ("generated_code_size_in_bytes", "argument_size_in_bytes",
+                 "output_size_in_bytes", "temp_size_in_bytes",
+                 "alias_size_in_bytes"):
+        try:
+            mem_d[attr] = int(getattr(mem, attr))
+        except Exception:
+            pass
+    try:
+        cost = dict(compiled.cost_analysis())
+        cost = {k: float(v) for k, v in cost.items()
+                if isinstance(v, (int, float))}
+    except Exception:
+        cost = {}
+
+    txt = compiled.as_text()
+    summary = hlo_stats.analyze(txt)
+    mb = (default_microbatches(cfg, shape)
+          if (shape.kind == "train" and microbatches is None)
+          else microbatches)
+
+    return {
+        **meta,
+        "n_devices": n_dev,
+        "microbatches": mb if shape.kind == "train" else None,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "memory_analysis": mem_d,
+        "cost_analysis_raw": cost,                  # NOTE: loop bodies x1
+        "flops_per_device": summary.flops,          # trip-weighted
+        "hbm_bytes_per_device": summary.hbm_bytes,
+        "collective_bytes_per_device": summary.coll_bytes,
+        "collective_counts": summary.coll_counts,
+        "total_collective_bytes": summary.total_coll_bytes,
+    }
+
+
+def cell_path(arch, shape_name, multi_pod, variant="baseline"):
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    suffix = "" if variant == "baseline" else f"__{variant}"
+    return os.path.join(
+        RESULTS_DIR, f"{arch}__{shape_name}__{mesh_name}{suffix}.json")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--variant", default="baseline")
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for arch in ARCH_IDS:
+            for shape in SHAPES:
+                for mp in (False, True):
+                    cells.append((arch, shape, mp))
+    else:
+        assert args.arch and args.shape
+        cells.append((args.arch, args.shape, args.multi_pod))
+
+    for arch, shape, mp in cells:
+        path = cell_path(arch, shape, mp, args.variant)
+        if os.path.exists(path) and not args.force:
+            print(f"[skip existing] {path}")
+            continue
+        print(f"=== {arch} x {shape} x "
+              f"{'pod2x16x16' if mp else 'pod16x16'} ===", flush=True)
+        try:
+            res = run_cell(arch, shape, multi_pod=mp,
+                           microbatches=args.microbatches,
+                           variant=args.variant)
+        except Exception as e:
+            res = {
+                "arch": arch, "shape": shape,
+                "mesh": "pod2x16x16" if mp else "pod16x16",
+                "error": f"{type(e).__name__}: {e}",
+                "traceback": traceback.format_exc()[-4000:],
+            }
+            print(res["error"], flush=True)
+        with open(path, "w") as f:
+            json.dump(res, f, indent=1)
+        if "skipped" in res:
+            print(f"skipped: {res['skipped']}")
+        elif "error" not in res:
+            print(f"ok: flops/dev={res['flops_per_device']:.3e} "
+                  f"hbm/dev={res['hbm_bytes_per_device']:.3e} "
+                  f"coll/dev={res['total_collective_bytes']:.3e} "
+                  f"compile={res['compile_s']}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,141 @@
+"""Builders for the sharded (pjit) train/prefill/decode steps plus the
+ShapeDtypeStruct input specs for every (arch x shape) dry-run cell.
+
+No device memory is touched here: parameters/optimizer/caches are
+``jax.eval_shape`` structs; the dry-run lowers and compiles against them.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.config import ModelConfig, ShapeConfig, SHAPES
+from repro.models.registry import get_model
+from repro.sharding import rules
+from repro.train.step import TrainState, make_train_state, train_step_fn
+
+
+def default_microbatches(cfg: ModelConfig, shape: ShapeConfig) -> int:
+    if shape.kind != "train":
+        return 1
+    big = cfg.param_count() > 2e10
+    return 8 if big else 4
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind == "train":
+        spec = {
+            "tokens": jax.ShapeDtypeStruct((b, s), i32),
+            "targets": jax.ShapeDtypeStruct((b, s), i32),
+        }
+        if cfg.frontend:
+            spec["prefix_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.n_frontend_tokens, cfg.d_model), jnp.float32)
+        return spec
+    if shape.kind == "prefill":
+        spec = {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+        if cfg.frontend:
+            spec["prefix_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.n_frontend_tokens, cfg.d_model), jnp.float32)
+        return spec
+    # decode: one new token against a seq_len cache
+    api = get_model(cfg)
+    cache = jax.eval_shape(lambda: api.init_cache(cfg, b, s))
+    return {"token": jax.ShapeDtypeStruct((b, 1), i32), "cache": cache}
+
+
+# ---------------------------------------------------------------------------
+
+
+def build_train_step(cfg: ModelConfig, mesh, shape: ShapeConfig,
+                     *, microbatches: Optional[int] = None):
+    """Returns (jitted_fn, (state_struct, batch_struct)) ready to lower."""
+    mb = default_microbatches(cfg, shape) if microbatches is None else microbatches
+    step = train_step_fn(cfg, microbatches=mb)
+    state_struct = jax.eval_shape(
+        lambda: make_train_state(cfg, jax.random.PRNGKey(0)))
+    batch_struct = input_specs(cfg, shape)
+
+    state_sh = rules.opt_state_shardings(cfg, state_struct, mesh, fsdp=True)
+    batch_sh = rules.tree_batch_shardings(batch_struct, mesh)
+    metric_sh = {
+        "loss": NamedSharding(mesh, P()),
+        "grad_norm": NamedSharding(mesh, P()),
+        "lr": NamedSharding(mesh, P()),
+    }
+    jitted = jax.jit(
+        step,
+        in_shardings=(state_sh, batch_sh),
+        out_shardings=(state_sh, metric_sh),
+        donate_argnums=(0,),
+    )
+    return jitted, (state_struct, batch_struct)
+
+
+def build_prefill(cfg: ModelConfig, mesh, shape: ShapeConfig):
+    api = get_model(cfg)
+    params_struct = jax.eval_shape(
+        lambda: api.init_params(cfg, jax.random.PRNGKey(0)))
+    batch_struct = input_specs(cfg, shape)
+    max_len = shape.seq_len
+
+    def fn(params, batch):
+        kw = {}
+        if "prefix_embeds" in batch:
+            kw["prefix_embeds"] = batch["prefix_embeds"]
+        return api.prefill(cfg, params, batch["tokens"], max_len, **kw)
+
+    out_struct = jax.eval_shape(fn, params_struct, batch_struct)
+    params_sh = rules.tree_param_shardings(cfg, params_struct, mesh, fsdp=True)
+    batch_sh = rules.tree_batch_shardings(batch_struct, mesh)
+    logits_sh = NamedSharding(mesh, rules.batch_spec(out_struct[0].shape, mesh))
+    cache_sh = rules.tree_cache_shardings(cfg, out_struct[1], mesh)
+    jitted = jax.jit(
+        fn,
+        in_shardings=(params_sh, batch_sh),
+        out_shardings=(logits_sh, cache_sh),
+    )
+    return jitted, (params_struct, batch_struct)
+
+
+def build_decode(cfg: ModelConfig, mesh, shape: ShapeConfig):
+    api = get_model(cfg)
+    params_struct = jax.eval_shape(
+        lambda: api.init_params(cfg, jax.random.PRNGKey(0)))
+    batch_struct = input_specs(cfg, shape)
+
+    def fn(params, batch):
+        return api.decode_step(cfg, params, batch["token"], batch["cache"])
+
+    out_struct = jax.eval_shape(fn, params_struct, batch_struct)
+    params_sh = rules.tree_param_shardings(cfg, params_struct, mesh, fsdp=True)
+    batch_sh = {
+        "token": NamedSharding(
+            mesh, rules.batch_spec(batch_struct["token"].shape, mesh)),
+        "cache": rules.tree_cache_shardings(cfg, batch_struct["cache"], mesh),
+    }
+    logits_sh = NamedSharding(mesh, rules.batch_spec(out_struct[0].shape, mesh))
+    cache_sh = rules.tree_cache_shardings(cfg, out_struct[1], mesh)
+    jitted = jax.jit(
+        fn,
+        in_shardings=(params_sh, batch_sh),
+        out_shardings=(logits_sh, cache_sh),
+        donate_argnums=(1,),
+    )
+    return jitted, (params_struct, batch_struct)
+
+
+def build_step(cfg: ModelConfig, mesh, shape: ShapeConfig, **kw):
+    if shape.kind == "train":
+        return build_train_step(cfg, mesh, shape, **kw)
+    if shape.kind == "prefill":
+        return build_prefill(cfg, mesh, shape)
+    return build_decode(cfg, mesh, shape)

@@ -1,0 +1,3 @@
+"""Model substrate: layers, attention variants, MoE, SSM/RWKV recurrences,
+decoder-only / encoder-decoder transformers, and the analog execution hook.
+"""

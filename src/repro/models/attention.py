@@ -1,0 +1,122 @@
+"""Attention block: GQA/MQA, RoPE, optional QKV bias / per-head qk-norm /
+sliding window, prefill + decode cache paths."""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.layers import AnalogCtx, dense, rms_norm, rope, streaming_attention
+
+
+def init_attention(key: jax.Array, cfg: ModelConfig, n_layers: int,
+                   dtype) -> dict:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    sc = d ** -0.5
+    p = {
+        "wq": jax.random.normal(ks[0], (n_layers, d, h * hd), dtype) * sc,
+        "wk": jax.random.normal(ks[1], (n_layers, d, kv * hd), dtype) * sc,
+        "wv": jax.random.normal(ks[2], (n_layers, d, kv * hd), dtype) * sc,
+        "wo": jax.random.normal(ks[3], (n_layers, h * hd, d), dtype)
+        * (h * hd) ** -0.5,
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((n_layers, h * hd), dtype)
+        p["bk"] = jnp.zeros((n_layers, kv * hd), dtype)
+        p["bv"] = jnp.zeros((n_layers, kv * hd), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((n_layers, hd), dtype)
+        p["k_norm"] = jnp.zeros((n_layers, hd), dtype)
+    return p
+
+
+def attention_block(
+    p: dict,                      # per-layer slice (no leading L axis)
+    x: jax.Array,                 # (B, S, d)
+    cfg: ModelConfig,
+    *,
+    positions: jax.Array,         # (S,) or (B, S) absolute positions
+    window,                       # scalar (possibly traced): huge = global
+    cache: Optional[dict] = None,  # {"k","v"}: (B, S_max, KV, hd)
+    cache_len=None,               # dynamic current cache fill
+    causal: bool = True,
+    ctx: Optional[AnalogCtx] = None,
+    aux: Optional[dict] = None,
+) -> Tuple[jax.Array, Optional[dict]]:
+    b, s, d = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+
+    from repro.sharding.perf import FLAGS, constrain_bs
+
+    seq_par = FLAGS.seq_parallel_attn and cache is None and s > 1
+
+    q = dense(x, p["wq"], "wq", ctx, aux, bias=p.get("bq"))
+    k = dense(x, p["wk"], "wk", ctx, aux, bias=p.get("bk"))
+    v = dense(x, p["wv"], "wv", ctx, aux, bias=p.get("bv"))
+    q = q.reshape(b, s, h, hd)
+    k = k.reshape(b, s, kv, hd)
+    v = v.reshape(b, s, kv, hd)
+
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+
+    if cache is None:
+        if seq_par:
+            # context parallelism: queries stay sequence-sharded; K/V are
+            # gathered over the model axis (cheap: kv_heads*hd << d).
+            q = constrain_bs(q, seq=True)
+            k = constrain_bs(k, seq=False)
+            v = constrain_bs(v, seq=False)
+        out = streaming_attention(
+            q, k, v, q_offset=0, causal=causal, window=window,
+        )
+        if seq_par:
+            out = constrain_bs(out, seq=True)
+        new_cache = {"k": k, "v": v}
+    else:
+        # decode: insert the new token(s) at cache_len, attend over the cache
+        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, cache_len, 1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, cache_len, 1)
+        out = streaming_attention(
+            q, ck, cv, q_offset=cache_len, causal=causal, window=window,
+            kv_len=cache_len + s,
+        )
+        new_cache = {"k": ck, "v": cv}
+
+    out = out.reshape(b, s, h * hd)
+    return dense(out, p["wo"], "wo", ctx, aux), new_cache
+
+
+def cross_attention_block(
+    p: dict,
+    x: jax.Array,                 # (B, S, d) decoder stream
+    enc_kv: Tuple[jax.Array, jax.Array],   # precomputed (B, Senc, KV, hd) x2
+    cfg: ModelConfig,
+    *,
+    ctx: Optional[AnalogCtx] = None,
+    aux: Optional[dict] = None,
+) -> jax.Array:
+    """Whisper-style cross attention against cached encoder K/V."""
+    b, s, d = x.shape
+    h, hd = cfg.n_heads, cfg.hd
+    q = dense(x, p["wq"], "xattn_wq", ctx, aux).reshape(b, s, h, hd)
+    k, v = enc_kv
+    out = streaming_attention(q, k, v, q_offset=0, causal=False, window=None)
+    return dense(out.reshape(b, s, h * hd), p["wo"], "xattn_wo", ctx, aux)
+
+
+def encode_cross_kv(p: dict, enc_out: jax.Array, cfg: ModelConfig) -> Tuple:
+    """Project encoder output once into cross-attention K/V."""
+    b, se, _ = enc_out.shape
+    kv, hd = cfg.n_kv_heads, cfg.hd
+    k = (enc_out @ p["wk"]).reshape(b, se, kv, hd)
+    v = (enc_out @ p["wv"]).reshape(b, se, kv, hd)
+    return k, v

@@ -1,0 +1,190 @@
+"""Whisper-style encoder-decoder (audio family).
+
+The conv/mel frontend is a STUB per the assignment: ``input_specs()``
+supplies precomputed frame embeddings (B, n_frames, d).  The encoder is a
+bidirectional pre-LN transformer with sinusoidal positions; the decoder is
+causal self-attention + cross-attention against the (once-projected)
+encoder K/V.  Decode shapes cache decoder self-attention KV plus the fixed
+cross-attention K/V.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.config import ModelConfig
+from repro.models.attention import (
+    attention_block,
+    cross_attention_block,
+    encode_cross_kv,
+    init_attention,
+)
+from repro.models.layers import norm
+from repro.models.mlp import init_mlp, mlp_block
+from repro.models.transformer import _norm_init, cast_params
+
+
+def _sinusoid(n: int, d: int) -> jax.Array:
+    pos = jnp.arange(n)[:, None].astype(jnp.float32)
+    dim = jnp.arange(d // 2)[None, :].astype(jnp.float32)
+    ang = pos / (10000.0 ** (2 * dim / d))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> dict:
+    ks = jax.random.split(key, 10)
+    d, v = cfg.d_model, cfg.vocab
+    le, ld = cfg.n_enc_layers, cfg.n_layers
+    dt = jnp.float32
+    enc = {
+        "attn": init_attention(ks[0], cfg, le, dt),
+        "mlp": init_mlp(ks[1], d, cfg.d_ff, cfg.act, le, dt),
+        "norm1": _norm_init(cfg, le, dt),
+        "norm2": _norm_init(cfg, le, dt),
+    }
+    dec = {
+        "attn": init_attention(ks[2], cfg, ld, dt),
+        "xattn": init_attention(ks[3], cfg, ld, dt),
+        "mlp": init_mlp(ks[4], d, cfg.d_ff, cfg.act, ld, dt),
+        "norm1": _norm_init(cfg, ld, dt),
+        "normx": _norm_init(cfg, ld, dt),
+        "norm2": _norm_init(cfg, ld, dt),
+    }
+    fn = (
+        {"scale": jnp.ones((d,), dt), "bias": jnp.zeros((d,), dt)}
+        if cfg.norm == "layernorm"
+        else {"scale": jnp.zeros((d,), dt)}
+    )
+    return {
+        "embed": jax.random.normal(ks[5], (v, d), dt) * d ** -0.5,
+        "enc_in": jax.random.normal(ks[6], (d, d), dt) * d ** -0.5,
+        "encoder": enc,
+        "decoder": dec,
+        "enc_final_norm": dict(fn),
+        "final_norm": dict(fn),
+    }
+
+
+def encode(cfg: ModelConfig, cp: dict, frames: jax.Array) -> jax.Array:
+    """frames: (B, n_frames, d) stub embeddings -> encoder states."""
+    b, s, d = frames.shape
+    x = frames @ cp["enc_in"] + _sinusoid(s, d)[None].astype(frames.dtype)
+    positions = jnp.arange(s)
+
+    def body(x, p_l):
+        h, _ = attention_block(
+            p_l["attn"], norm(x, p_l["norm1"], cfg.norm), cfg,
+            positions=positions, window=None, causal=False,
+        )
+        x = x + h
+        x = x + mlp_block(p_l["mlp"], norm(x, p_l["norm2"], cfg.norm), cfg.act)
+        return x, None
+
+    x, _ = lax.scan(body, x, cp["encoder"])
+    return norm(x, cp["enc_final_norm"], cfg.norm)
+
+
+def _decoder_scan(cfg, cp, x, *, positions, cross_kv, cache, cache_len):
+    xs = {"p": cp["decoder"], "ckv": cross_kv}
+    if cache is not None:
+        xs["c"] = cache
+
+    def body(x, xs_l):
+        p_l = xs_l["p"]
+        h, new_kv = attention_block(
+            p_l["attn"], norm(x, p_l["norm1"], cfg.norm), cfg,
+            positions=positions, window=None,
+            cache=xs_l.get("c"), cache_len=cache_len,
+        )
+        x = x + h
+        x = x + cross_attention_block(
+            p_l["xattn"], norm(x, p_l["normx"], cfg.norm), xs_l["ckv"], cfg)
+        x = x + mlp_block(p_l["mlp"], norm(x, p_l["norm2"], cfg.norm), cfg.act)
+        return x, {"kv": new_kv}
+
+    x, ys = lax.scan(body, x, xs)
+    return x, ys["kv"]
+
+
+def forward(cfg: ModelConfig, params: dict, tokens, *, frames=None,
+            pack=None, remat: Optional[bool] = None, prefix_embeds=None):
+    """Teacher-forced training forward.  ``frames`` defaults to
+    ``prefix_embeds`` (the generic frontend-stub argument)."""
+    frames = frames if frames is not None else prefix_embeds
+    dtype = jnp.dtype(cfg.dtype)
+    cp = cast_params(params, dtype)
+    enc = encode(cfg, cp, frames.astype(dtype))
+    cross_kv = _stack_cross_kv(cfg, cp, enc)
+    b, s = tokens.shape
+    x = cp["embed"][tokens].astype(dtype) + _sinusoid(
+        s, cfg.d_model)[None].astype(dtype)
+    x, _ = _decoder_scan(cfg, cp, x, positions=jnp.arange(s),
+                         cross_kv=cross_kv, cache=None, cache_len=None)
+    x = norm(x, cp["final_norm"], cfg.norm)
+    logits = (x @ cp["embed"].T).astype(jnp.float32)
+    return logits, {}
+
+
+def _stack_cross_kv(cfg, cp, enc):
+    def per_layer(p_l):
+        return encode_cross_kv(p_l, enc, cfg)
+
+    return jax.vmap(per_layer)(
+        {"wk": cp["decoder"]["xattn"]["wk"], "wv": cp["decoder"]["xattn"]["wv"]}
+    )
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    dtype = jnp.dtype(cfg.dtype)
+    l, kv, hd = cfg.n_layers, cfg.n_kv_heads, cfg.hd
+    return {
+        "k": jnp.zeros((l, batch, max_len, kv, hd), dtype),
+        "v": jnp.zeros((l, batch, max_len, kv, hd), dtype),
+        "ckv": (
+            jnp.zeros((l, batch, cfg.cross_kv_len, kv, hd), dtype),
+            jnp.zeros((l, batch, cfg.cross_kv_len, kv, hd), dtype),
+        ),
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+def prefill(cfg: ModelConfig, params: dict, tokens, max_len: int,
+            *, frames=None, pack=None, prefix_embeds=None):
+    frames = frames if frames is not None else prefix_embeds
+    dtype = jnp.dtype(cfg.dtype)
+    cp = cast_params(params, dtype)
+    enc = encode(cfg, cp, frames.astype(dtype))
+    cross_kv = _stack_cross_kv(cfg, cp, enc)
+    b, s = tokens.shape
+    x = cp["embed"][tokens].astype(dtype) + _sinusoid(
+        s, cfg.d_model)[None].astype(dtype)
+    x, kv = _decoder_scan(cfg, cp, x, positions=jnp.arange(s),
+                          cross_kv=cross_kv, cache=None, cache_len=None)
+    x = norm(x, cp["final_norm"], cfg.norm)
+    logits = (x[:, -1:] @ cp["embed"].T).astype(jnp.float32)
+    pad = max_len - s
+    kv = jax.tree.map(
+        lambda a: jnp.pad(a, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))), kv)
+    return logits, {"k": kv["k"], "v": kv["v"], "ckv": cross_kv,
+                    "len": jnp.asarray(s, jnp.int32)}
+
+
+def decode_step(cfg: ModelConfig, params: dict, token, cache, *, pack=None):
+    dtype = jnp.dtype(cfg.dtype)
+    cp = cast_params(params, dtype)
+    t = cache["len"]
+    x = cp["embed"][token].astype(dtype)
+    x = x + jax.lax.dynamic_slice_in_dim(
+        _sinusoid(1 << 16, cfg.d_model).astype(dtype), t, 1, 0)[None]
+    layer_cache = {"k": cache["k"], "v": cache["v"]}
+    xs_cache = layer_cache
+    x, kv = _decoder_scan(cfg, cp, x, positions=t + jnp.arange(1)[None, :],
+                          cross_kv=cache["ckv"], cache=xs_cache, cache_len=t)
+    x = norm(x, cp["final_norm"], cfg.norm)
+    logits = (x @ cp["embed"].T).astype(jnp.float32)
+    return logits, {"k": kv["k"], "v": kv["v"], "ckv": cache["ckv"],
+                    "len": t + 1}

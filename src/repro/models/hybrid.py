@@ -1,0 +1,185 @@
+"""Zamba2-style hybrid: a Mamba2 backbone with a *shared* attention+MLP
+block applied every ``attn_every`` layers (weight sharing across all
+applications — the Zamba signature).
+
+Scan layout: the Mamba layers are scanned with a per-layer ``apply_attn``
+flag; the shared block's parameters ride along as closure constants.  Each
+application has its own KV cache (activations differ per application),
+carried through the scan as an (n_apps, ...) stack and updated in place at
+``app_idx`` — so cache memory is n_apps x, not n_layers x.  ``lax.cond``
+skips the attention compute on non-flagged layers.
+
+Prefill is the cache-ful path with ``cache_len = 0`` (multi-token insert);
+decode is the same path with one token.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.config import ModelConfig
+from repro.models import ssm as ssm_mod
+from repro.models.attention import attention_block, init_attention
+from repro.models.layers import norm
+from repro.models.mlp import init_mlp, mlp_block
+from repro.models.transformer import _head, _norm_init, cast_params
+
+
+def attn_positions(cfg: ModelConfig):
+    period = cfg.attn_every
+    return [i for i in range(cfg.n_layers) if i % period == period - 1]
+
+
+def n_attn_apps(cfg: ModelConfig) -> int:
+    return len(attn_positions(cfg))
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> dict:
+    ks = jax.random.split(key, 6)
+    d, l, v = cfg.d_model, cfg.n_layers, cfg.vocab
+    dt = jnp.float32
+    shared = {
+        "attn": jax.tree.map(lambda a: a[0], init_attention(ks[1], cfg, 1, dt)),
+        "mlp": jax.tree.map(lambda a: a[0],
+                            init_mlp(ks[2], d, cfg.d_ff, cfg.act, 1, dt)),
+        "norm1": jax.tree.map(lambda a: a[0], _norm_init(cfg, 1, dt)),
+        "norm2": jax.tree.map(lambda a: a[0], _norm_init(cfg, 1, dt)),
+    }
+    return {
+        "embed": jax.random.normal(ks[0], (v, d), dt) * d ** -0.5,
+        "final_norm": {"scale": jnp.zeros((d,), dt)},
+        "lm_head": jax.random.normal(ks[3], (d, v), dt) * d ** -0.5,
+        "layers": {
+            "mamba": ssm_mod.init_mamba(ks[4], cfg, l, dt),
+            "norm": _norm_init(cfg, l, dt),
+        },
+        "shared": shared,
+    }
+
+
+def _shared_attn(cfg, sp, x, *, positions, kv_cache, cache_len):
+    h, new_kv = attention_block(
+        sp["attn"], norm(x, sp["norm1"], cfg.norm), cfg,
+        positions=positions, window=None, cache=kv_cache,
+        cache_len=cache_len,
+    )
+    x = x + h
+    x = x + mlp_block(sp["mlp"], norm(x, sp["norm2"], cfg.norm), cfg.act)
+    return x, new_kv
+
+
+def _scan(cfg, cp, x, *, positions, state, kv_caches, cache_len, remat):
+    l = cfg.n_layers
+    flags = jnp.array(
+        [1 if i % cfg.attn_every == cfg.attn_every - 1 else 0
+         for i in range(l)], jnp.int32)
+    app_idx = jnp.cumsum(flags) - flags
+    sp = cp["shared"]
+    decode = x.shape[1] == 1 and cache_len is not None
+
+    xs = {"p": cp["layers"], "flag": flags, "app": app_idx}
+    if state is not None:
+        xs["s"] = state
+
+    def body(carry, xs_l):
+        x, kvs = carry
+
+        if kvs is None:
+            # training path: no cache anywhere
+            def t_fn(x):
+                return _shared_attn(cfg, sp, x, positions=positions,
+                                    kv_cache=None, cache_len=None)[0]
+
+            x = lax.cond(xs_l["flag"] == 1, t_fn, lambda x: x, x)
+        else:
+            kv_l = jax.tree.map(lambda a: a[xs_l["app"]], kvs)
+
+            def t_fn(args):
+                x, kv_l = args
+                return _shared_attn(cfg, sp, x, positions=positions,
+                                    kv_cache=kv_l, cache_len=cache_len)
+
+            def f_fn(args):
+                x, kv_l = args
+                return x, kv_l
+
+            x, kv_new = lax.cond(xs_l["flag"] == 1, t_fn, f_fn, (x, kv_l))
+            kvs = jax.tree.map(
+                lambda all_, new: lax.dynamic_update_index_in_dim(
+                    all_, new, xs_l["app"], 0),
+                kvs, kv_new)
+
+        h, new_state = ssm_mod.mamba_block(
+            xs_l["p"]["mamba"], norm(x, xs_l["p"]["norm"], cfg.norm), cfg,
+            state=xs_l.get("s"), decode=decode,
+        )
+        x = x + h
+        return (x, kvs), {"state": new_state}
+
+    if remat:
+        body = jax.checkpoint(body)
+    (x, kvs), ys = lax.scan(body, (x, kv_caches), xs)
+    return x, ys["state"], kvs
+
+
+def forward(cfg: ModelConfig, params: dict, tokens, *, pack=None,
+            remat: Optional[bool] = None, prefix_embeds=None):
+    dtype = jnp.dtype(cfg.dtype)
+    cp = cast_params(params, dtype)
+    x = cp["embed"][tokens].astype(dtype)
+    positions = jnp.arange(tokens.shape[1])
+    remat = cfg.remat if remat is None else remat
+    x, _, _ = _scan(cfg, cp, x, positions=positions, state=None,
+                    kv_caches=None, cache_len=None, remat=remat)
+    return _head(cfg, cp, x, None), {}
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    dtype = jnp.dtype(cfg.dtype)
+    l = cfg.n_layers
+    apps = n_attn_apps(cfg)
+    st = ssm_mod.mamba_state_init(cfg, batch, dtype)
+    return {
+        "state": jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (l,) + a.shape).copy(), st),
+        "kv": {
+            "k": jnp.zeros((apps, batch, max_len, cfg.n_kv_heads, cfg.hd),
+                           dtype),
+            "v": jnp.zeros((apps, batch, max_len, cfg.n_kv_heads, cfg.hd),
+                           dtype),
+        },
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+def prefill(cfg: ModelConfig, params: dict, tokens, max_len: int,
+            *, pack=None, prefix_embeds=None):
+    b, s = tokens.shape
+    dtype = jnp.dtype(cfg.dtype)
+    cp = cast_params(params, dtype)
+    cache = init_cache(cfg, b, max_len)
+    x = cp["embed"][tokens].astype(dtype)
+    positions = jnp.arange(s)
+    x, states, kvs = _scan(cfg, cp, x, positions=positions,
+                           state=cache["state"], kv_caches=cache["kv"],
+                           cache_len=jnp.zeros((), jnp.int32), remat=False)
+    logits = _head(cfg, cp, x[:, -1:], None)
+    return logits, {"state": states, "kv": kvs,
+                    "len": jnp.asarray(s, jnp.int32)}
+
+
+def decode_step(cfg: ModelConfig, params: dict, token, cache, *, pack=None):
+    dtype = jnp.dtype(cfg.dtype)
+    cp = cast_params(params, dtype)
+    x = cp["embed"][token].astype(dtype)
+    t = cache["len"]
+    positions = t + jnp.arange(1)[None, :]
+    x, states, kvs = _scan(cfg, cp, x, positions=positions,
+                           state=cache["state"], kv_caches=cache["kv"],
+                           cache_len=t, remat=False)
+    logits = _head(cfg, cp, x, None)
+    return logits, {"state": states, "kv": kvs, "len": t + 1}

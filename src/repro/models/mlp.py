@@ -1,0 +1,181 @@
+"""Feed-forward blocks: gated (SwiGLU/GeGLU) and plain MLPs, plus top-k
+token-choice Mixture-of-Experts with capacity-based dispatch.
+
+MoE dispatch avoids any (tokens, experts, capacity) tensor: assignments are
+flattened, positions-within-expert computed by a (tokens*k, E) cumsum, and
+tokens moved with scatter/gather into an (E*C, d) buffer.  Under the
+production mesh the buffer shards over the model axis (expert parallelism)
+and the scatter lowers to an all-to-all-style exchange.  Dropped tokens
+(beyond capacity) fall back to the residual stream, standard for
+capacity-based routing.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.layers import ACTIVATIONS, AnalogCtx, dense
+
+
+def init_mlp(key: jax.Array, d: int, ff: int, act: str, n_layers: int,
+             dtype) -> dict:
+    ks = jax.random.split(key, 3)
+    sc_in, sc_out = d ** -0.5, ff ** -0.5
+    p = {
+        "w_up": jax.random.normal(ks[0], (n_layers, d, ff), dtype) * sc_in,
+        "w_down": jax.random.normal(ks[1], (n_layers, ff, d), dtype) * sc_out,
+    }
+    if act in ("swiglu", "geglu"):
+        p["w_gate"] = jax.random.normal(ks[2], (n_layers, d, ff), dtype) * sc_in
+    return p
+
+
+def mlp_block(p: dict, x: jax.Array, act: str,
+              ctx: Optional[AnalogCtx] = None,
+              aux: Optional[dict] = None) -> jax.Array:
+    fn = ACTIVATIONS[act]
+    if "w_gate" in p:
+        g = fn(dense(x, p["w_gate"], "w_gate", ctx, aux))
+        h = g * dense(x, p["w_up"], "w_up", ctx, aux)
+    else:
+        h = fn(dense(x, p["w_up"], "w_up", ctx, aux))
+    return dense(h, p["w_down"], "w_down", ctx, aux)
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts
+# ---------------------------------------------------------------------------
+
+
+def init_moe(key: jax.Array, cfg: ModelConfig, n_layers: int, dtype) -> dict:
+    d, e, ff = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    ks = jax.random.split(key, 4)
+    sc_in, sc_out = d ** -0.5, ff ** -0.5
+    return {
+        "router": jax.random.normal(ks[0], (n_layers, d, e), jnp.float32) * sc_in,
+        "w_gate": jax.random.normal(ks[1], (n_layers, e, d, ff), dtype) * sc_in,
+        "w_up": jax.random.normal(ks[2], (n_layers, e, d, ff), dtype) * sc_in,
+        "w_down": jax.random.normal(ks[3], (n_layers, e, ff, d), dtype) * sc_out,
+    }
+
+
+def moe_capacity(n_tokens: int, cfg: ModelConfig) -> int:
+    c = math.ceil(n_tokens * cfg.top_k * cfg.capacity_factor / cfg.n_experts)
+    return max(8, -(-c // 8) * 8)
+
+
+def moe_block(
+    p: dict,
+    x: jax.Array,                  # (B, S, d)
+    cfg: ModelConfig,
+    ctx: Optional[AnalogCtx] = None,
+    aux: Optional[dict] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (output, load_balance_aux_loss)."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    t = b * s
+    xt = x.reshape(t, d)
+
+    logits = (xt.astype(jnp.float32) @ p["router"]).astype(jnp.float32)
+    gates = jax.nn.softmax(logits, axis=-1)                      # (T, E)
+    topw, topi = jax.lax.top_k(gates, k)                         # (T, k)
+    topw = topw / jnp.sum(topw, axis=-1, keepdims=True)          # renorm
+
+    # load-balance loss (Switch-style): E * sum_e f_e * p_e
+    me = jnp.mean(gates, axis=0)
+    ce = jnp.zeros((e,), jnp.float32).at[topi.reshape(-1)].add(
+        jnp.ones((t * k,), jnp.float32)
+    ) / (t * k)
+    lb_loss = e * jnp.sum(me * ce)
+
+    # ---- dispatch -------------------------------------------------------
+    cap = moe_capacity(t, cfg)
+    eid = topi.reshape(-1)                                       # (T*k,)
+    wgt = topw.reshape(-1).astype(x.dtype)
+    tok = jnp.repeat(jnp.arange(t), k)
+
+    onehot = jax.nn.one_hot(eid, e, dtype=jnp.int32)             # (T*k, E)
+    pos = jnp.cumsum(onehot, axis=0) - onehot                    # pos before me
+    pos = jnp.sum(pos * onehot, axis=-1)                         # (T*k,)
+    keep = pos < cap
+    dest = jnp.where(keep, eid * cap + pos, e * cap)             # overflow slot
+
+    xbuf = jnp.zeros((e * cap + 1, d), x.dtype).at[dest].add(xt[tok])
+    xe = xbuf[: e * cap].reshape(e, cap, d)
+
+    from repro.sharding.perf import FLAGS, constraint
+
+    if FLAGS.moe_dispatch_sharding:
+        # Force the dispatched buffer onto the expert-parallel layout so
+        # the scatter lowers to an exchange instead of replicate+all-reduce
+        # (EXPERIMENTS.md §Perf, hypothesis M1 — REFUTED in round 2:
+        # GSPMD replicated the buffer and expert compute blew up 6.6x).
+        xe = constraint(xe, "model", None, None)
+    if FLAGS.moe_cap_shard:
+        # Hypothesis M4: 2D expert parallelism — experts over "model",
+        # capacity over "data", so expert FLOPs distribute over all 256
+        # chips with an all-to-all dispatch instead of f-dim all-reduces.
+        def _cap(z):
+            try:
+                return constraint(z, "model", "data", None)
+            except Exception:
+                return constraint(z, "model", None, None)
+        xe = _cap(xe)
+    if FLAGS.moe_weight_gather:
+        # Hypothesis M3: expert weights are FSDP-sharded on the f
+        # (contraction) dim; GSPMD then ALL-REDUCES the (E,C,d) activations
+        # (10.7 GB/layer) instead of ALL-GATHERING the (E/16,d,f) weights
+        # (0.3 GB/layer).  Constrain the weights to gather-before-use,
+        # leaving the dispatch layout to the partitioner.
+        p = dict(p)
+        for wname in ("w_gate", "w_up", "w_down"):
+            p[wname] = constraint(p[wname], "model", None, None)
+
+    # ---- expert compute (batched over experts) --------------------------
+    fn = ACTIVATIONS[cfg.act]
+    g = fn(jnp.einsum("ecd,edf->ecf", xe, p["w_gate"]))
+    h = g * jnp.einsum("ecd,edf->ecf", xe, p["w_up"])
+    ye = jnp.einsum("ecf,efd->ecd", h, p["w_down"])              # (E, C, d)
+    if FLAGS.moe_dispatch_sharding:
+        ye = constraint(ye, "model", None, None)
+    if FLAGS.moe_cap_shard:
+        ye = _cap(ye)
+
+    # ---- combine ---------------------------------------------------------
+    yflat = ye.reshape(e * cap, d)
+    contrib = jnp.where(keep, wgt, 0.0)[:, None] * yflat[
+        jnp.minimum(dest, e * cap - 1)
+    ]
+    y = jnp.zeros((t, d), x.dtype).at[tok].add(contrib)
+
+    if aux is not None:
+        aux["moe/lb_loss"] = lb_loss
+        aux["moe/drop_frac"] = 1.0 - jnp.mean(keep.astype(jnp.float32))
+    return y.reshape(b, s, d), lb_loss
+
+
+def moe_block_dense_ref(p, x, cfg):
+    """O(E) dense reference used by tests: every expert computes every
+    token, outputs weighted by the (renormalized) top-k gates."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    xt = x.reshape(-1, d)
+    gates = jax.nn.softmax(xt.astype(jnp.float32) @ p["router"], axis=-1)
+    topw, topi = jax.lax.top_k(gates, k)
+    topw = topw / jnp.sum(topw, axis=-1, keepdims=True)
+    wfull = jnp.zeros_like(gates)
+    wfull = jax.vmap(lambda wrow, irow, vrow: wrow.at[irow].set(vrow))(
+        wfull, topi, topw
+    )
+    fn = ACTIVATIONS[cfg.act]
+    g = fn(jnp.einsum("td,edf->etf", xt, p["w_gate"]))
+    h = g * jnp.einsum("td,edf->etf", xt, p["w_up"])
+    ye = jnp.einsum("etf,efd->etd", h, p["w_down"])
+    y = jnp.einsum("te,etd->td", wfull.astype(x.dtype), ye)
+    return y.reshape(b, s, d)

@@ -1,0 +1,143 @@
+"""Linear-recurrence substrate for SSM / RWKV architectures.
+
+The shared primitive is the gated-decay state recurrence
+
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T          (state: (dk, dv) per head)
+    y_t = r_t @ S_{t-1} + (r_t * u) . k_t * v_t  (rwkv: current-token bonus)
+    y_t = r_t @ S_t                              (mamba: current included)
+
+computed in *chunks*: within a chunk, pairwise decay factors are evaluated
+in log space with non-positive exponents (numerically safe regardless of
+decay rate); across chunks a ``lax.scan`` carries the state.  This is the
+TPU-friendly formulation: each chunk is a handful of einsums (MXU) instead
+of a length-S sequential loop.
+
+Both RWKV6's per-channel data-dependent decay (w_t: (B,S,H,dk)) and
+Mamba2's per-head scalar decay (broadcast over dk) use the same code path.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def chunked_decay_recurrence(
+    r: jax.Array,               # (B, S, H, dk)
+    k: jax.Array,               # (B, S, H, dk)
+    v: jax.Array,               # (B, S, H, dv)
+    log_w: jax.Array,           # (B, S, H, dk) log-decay, <= 0
+    *,
+    u: Optional[jax.Array] = None,   # (H, dk) rwkv bonus; None => mamba mode
+    s0: Optional[jax.Array] = None,  # (B, H, dk, dv) initial state
+    chunk: int = 32,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y: (B,S,H,dv), final_state: (B,H,dk,dv))."""
+    b, s, h, dk = r.shape
+    dv = v.shape[-1]
+    include_current = u is None
+
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        zf = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v = zf(r), zf(k), zf(v)
+        log_w = jnp.pad(log_w, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    n_chunks = (s + pad) // chunk
+
+    rc = r.reshape(b, n_chunks, chunk, h, dk).swapaxes(0, 1).astype(jnp.float32)
+    kc = k.reshape(b, n_chunks, chunk, h, dk).swapaxes(0, 1).astype(jnp.float32)
+    vc = v.reshape(b, n_chunks, chunk, h, dv).swapaxes(0, 1).astype(jnp.float32)
+    lwc = log_w.reshape(b, n_chunks, chunk, h, dk).swapaxes(0, 1)
+    lwc = lwc.astype(jnp.float32)
+
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool), -1)   # strict lower
+
+    if s0 is None:
+        s0 = jnp.zeros((b, h, dk, dv), jnp.float32)
+
+    def body(state, inp):
+        rj, kj, vj, lwj = inp                       # (B, C, H, dk/dv)
+        le = jnp.cumsum(lwj, axis=1)                # inclusive cum log-decay
+        le_prev = le - lwj                          # exclusive
+        le_q = le if include_current else le_prev   # decay ref for queries
+
+        # pairwise intra-chunk decay: W_t(ref)/W_s = exp(le_q_t - le_s),
+        # argument <= 0 for s <= t since le is non-increasing.
+        diff = le_q[:, :, None, :, :] - le[:, None, :, :, :]   # (B,Ct,Cs,H,dk)
+        decay = jnp.exp(jnp.minimum(diff, 0.0))
+        a = jnp.einsum("bthd,bshd,btshd->bhts", rj, kj, decay)
+        if include_current:
+            mask = tri | jnp.eye(chunk, dtype=bool)
+        else:
+            mask = tri
+        a = a * mask[None, None]
+        y = jnp.einsum("bhts,bshv->bthv", a, vj)
+
+        if u is not None:  # rwkv current-token bonus
+            y = y + jnp.einsum("bthd,hd,bthd,bthv->bthv", rj, u.astype(jnp.float32), kj, vj)
+
+        # carry-in contribution: r_t decayed to chunk start
+        rq = rj * jnp.exp(le_q)
+        y = y + jnp.einsum("bthd,bhdv->bthv", rq, state)
+
+        # state update to chunk end
+        le_end = le[:, -1:, :, :]                   # (B,1,H,dk)
+        k_dec = kj * jnp.exp(le[:, -1:, :, :] - le) # wait: see note below
+        new_state = state * jnp.exp(le_end[:, 0, :, :, None]) + jnp.einsum(
+            "bshd,bshv->bhdv", k_dec, vj
+        )
+        return new_state, y
+
+    # NOTE on k_dec: contribution of token s to the end-of-chunk state is
+    # k_s * exp(le_end - le_s) (decay applied AFTER insertion, exclusive of
+    # step s itself): S_C = diag(W_C) S_0 + sum_s diag(W_C / W_s) k_s v_s^T.
+    state, ys = lax.scan(body, s0, (rc, kc, vc, lwc))
+    y = ys.swapaxes(0, 1).reshape(b, n_chunks * chunk, h, dv)[:, :s]
+    return y.astype(r.dtype), state
+
+
+def decay_recurrence_naive(r, k, v, log_w, *, u=None, s0=None):
+    """Step-by-step oracle for tests."""
+    b, s, h, dk = r.shape
+    dv = v.shape[-1]
+    if s0 is None:
+        s0 = jnp.zeros((b, h, dk, dv), jnp.float32)
+    rf, kf, vf = (a.astype(jnp.float32) for a in (r, k, v))
+    wf = jnp.exp(log_w.astype(jnp.float32))
+
+    def body(state, inp):
+        rt, kt, vt, wt = inp                        # (B, H, dk/dv)
+        kv = jnp.einsum("bhd,bhv->bhdv", kt, vt)
+        if u is None:
+            new = state * wt[..., None] + kv
+            y = jnp.einsum("bhd,bhdv->bhv", rt, new)
+        else:
+            y = jnp.einsum("bhd,bhdv->bhv", rt, state) + jnp.einsum(
+                "bhd,hd,bhd,bhv->bhv", rt, u.astype(jnp.float32), kt, vt
+            )
+            new = state * wt[..., None] + kv
+        return new, y
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (rf, kf, vf, wf))
+    state, ys = lax.scan(body, s0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(r.dtype), state
+
+
+def decay_step(r, k, v, log_w, state, *, u=None):
+    """Single-token decode step.  r/k/v: (B, H, dk|dv); state (B,H,dk,dv)."""
+    rf, kf, vf = (a.astype(jnp.float32) for a in (r, k, v))
+    w = jnp.exp(log_w.astype(jnp.float32))
+    kv = jnp.einsum("bhd,bhv->bhdv", kf, vf)
+    if u is None:
+        new = state * w[..., None] + kv
+        y = jnp.einsum("bhd,bhdv->bhv", rf, new)
+    else:
+        y = jnp.einsum("bhd,bhdv->bhv", rf, state) + jnp.einsum(
+            "bhd,hd,bhd,bhv->bhv", rf, u.astype(jnp.float32), kf, vf
+        )
+        new = state * w[..., None] + kv
+    return y.astype(r.dtype), new

@@ -1,0 +1,52 @@
+"""Model registry: family -> (init, forward, prefill, decode, init_cache)."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+from repro.config import ModelConfig
+from repro.models import encdec, hybrid, transformer
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelApi:
+    init_params: Callable
+    forward: Callable          # (cfg, params, tokens, **kw) -> (logits, aux)
+    prefill: Callable          # (cfg, params, tokens, max_len, **kw)
+    decode_step: Callable      # (cfg, params, token, cache, **kw)
+    init_cache: Callable       # (cfg, batch, max_len)
+
+
+_TRANSFORMER = ModelApi(
+    init_params=transformer.init_params,
+    forward=transformer.forward,
+    prefill=transformer.prefill,
+    decode_step=transformer.decode_step,
+    init_cache=transformer.init_cache,
+)
+
+_HYBRID = ModelApi(
+    init_params=hybrid.init_params,
+    forward=hybrid.forward,
+    prefill=hybrid.prefill,
+    decode_step=hybrid.decode_step,
+    init_cache=hybrid.init_cache,
+)
+
+_ENCDEC = ModelApi(
+    init_params=encdec.init_params,
+    forward=encdec.forward,
+    prefill=encdec.prefill,
+    decode_step=encdec.decode_step,
+    init_cache=encdec.init_cache,
+)
+
+
+def get_model(cfg: ModelConfig) -> ModelApi:
+    if cfg.family == "audio":
+        return _ENCDEC
+    if cfg.family == "hybrid":
+        return _HYBRID
+    # dense / moe / vlm / ssm(rwkv) all run on the unified transformer
+    return _TRANSFORMER

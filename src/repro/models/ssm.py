@@ -1,0 +1,263 @@
+"""Mamba2 and RWKV6 blocks on the shared chunked decay recurrence.
+
+Faithfulness notes (see DESIGN.md §Arch-applicability):
+
+* Mamba2: in/out projections, depthwise causal conv, per-head scalar decay
+  ``exp(-softplus(dt) * A_h)``, SSD recurrence with state ``ssm_state``,
+  D skip, gated (SiLU) output, RMS norm before out-projection.
+* RWKV6 "Finch": token-shift with learned static mix, r/k/v/g projections,
+  **data-dependent decay** via a low-rank MLP on the shifted stream (the
+  Finch hallmark, kept faithful), current-token bonus ``u``, per-head group
+  norm, SiLU gate.  The data-dependent token-shift interpolation (ddlerp)
+  is simplified to a static mix — it does not interact with the paper's
+  technique (projections are standard MVMs either way).
+
+The analog hook applies to the *weight-stationary projections* only; the
+state recurrences are dynamic and stay digital (the paper's technique
+targets in-memory MVMs against stored weights).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.layers import AnalogCtx, dense, rms_norm
+from repro.models.recurrent import chunked_decay_recurrence, decay_step
+
+CONV_W = 4  # depthwise conv window
+
+
+# ---------------------------------------------------------------------------
+# Mamba2
+# ---------------------------------------------------------------------------
+
+
+def mamba_dims(cfg: ModelConfig) -> Tuple[int, int, int]:
+    h = cfg.ssm_heads
+    hd = cfg.ssm_head_dim
+    return h, hd, cfg.ssm_state
+
+
+def init_mamba(key: jax.Array, cfg: ModelConfig, n_layers: int, dtype) -> dict:
+    d = cfg.d_model
+    h, hd, st = mamba_dims(cfg)
+    din = h * hd
+    proj_out = 2 * din + 2 * st + h          # z, x, B, C, dt
+    ks = jax.random.split(key, 5)
+    return {
+        "in_proj": jax.random.normal(ks[0], (n_layers, d, proj_out), dtype)
+        * d ** -0.5,
+        "conv_w": jax.random.normal(ks[1], (n_layers, CONV_W, din + 2 * st),
+                                    dtype) * 0.3,
+        "a_log": jnp.zeros((n_layers, h), jnp.float32),
+        "dt_bias": jnp.zeros((n_layers, h), jnp.float32),
+        "d_skip": jnp.ones((n_layers, h), jnp.float32),
+        "out_norm": jnp.zeros((n_layers, din), dtype),
+        "out_proj": jax.random.normal(ks[2], (n_layers, din, d), dtype)
+        * din ** -0.5,
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array,
+                 carry: Optional[jax.Array] = None):
+    """Depthwise causal conv.  x: (B,S,C); w: (W,C); carry: (B,W-1,C)."""
+    b, s, c = x.shape
+    if carry is None:
+        carry = jnp.zeros((b, CONV_W - 1, c), x.dtype)
+    xp = jnp.concatenate([carry, x], axis=1)
+    out = sum(
+        xp[:, i : i + s, :] * w[i][None, None, :] for i in range(CONV_W)
+    )
+    new_carry = xp[:, -(CONV_W - 1) :, :]
+    return jax.nn.silu(out), new_carry
+
+
+def mamba_block(
+    p: dict,
+    x: jax.Array,                   # (B, S, d)
+    cfg: ModelConfig,
+    *,
+    state: Optional[dict] = None,   # {"ssm": (B,H,st,hd), "conv": (B,W-1,C)}
+    decode: bool = False,
+    ctx: Optional[AnalogCtx] = None,
+    aux: Optional[dict] = None,
+) -> Tuple[jax.Array, dict]:
+    b, s, d = x.shape
+    h, hd, st = mamba_dims(cfg)
+    din = h * hd
+
+    zxbcdt = dense(x, p["in_proj"], "ssm_in", ctx, aux)
+    z, xs, bc, dt = jnp.split(zxbcdt, [din, 2 * din, 2 * din + 2 * st], axis=-1)
+    conv_in = jnp.concatenate([xs, bc], axis=-1)
+    conv_out, conv_carry = _causal_conv(
+        conv_in, p["conv_w"], None if state is None else state["conv"]
+    )
+    xs = conv_out[..., :din].reshape(b, s, h, hd)
+    bmat = conv_out[..., din : din + st]                     # (B,S,st)
+    cmat = conv_out[..., din + st :]                         # (B,S,st)
+
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))             # (H,) negative
+    dt_sp = jax.nn.softplus(dt.astype(jnp.float32)
+                            + p["dt_bias"].astype(jnp.float32))  # (B,S,H)
+    log_w = (dt_sp * a[None, None, :])[..., None]            # (B,S,H,1) <= 0
+    log_w = jnp.broadcast_to(log_w, (b, s, h, st))
+
+    # k = dt-scaled B (shared across heads), v = x, r = C
+    k = jnp.broadcast_to(bmat[:, :, None, :], (b, s, h, st)) * dt_sp[..., None]
+    r = jnp.broadcast_to(cmat[:, :, None, :], (b, s, h, st))
+    v = xs
+
+    s0 = None if state is None else state["ssm"]
+    if decode:
+        y1, new_ssm = decay_step(
+            r[:, 0], k[:, 0], v[:, 0], log_w[:, 0],
+            s0 if s0 is not None else jnp.zeros((b, h, st, hd), jnp.float32),
+        )
+        y = y1[:, None]
+    else:
+        y, new_ssm = chunked_decay_recurrence(r, k, v, log_w, s0=s0, chunk=64)
+
+    y = y + xs * p["d_skip"].astype(x.dtype)[None, None, :, None]
+    y = y.reshape(b, s, din) * jax.nn.silu(z)
+    y = rms_norm(y, p["out_norm"])
+    out = dense(y, p["out_proj"], "ssm_out", ctx, aux)
+    return out, {"ssm": new_ssm, "conv": conv_carry}
+
+
+def mamba_state_init(cfg: ModelConfig, b: int, dtype) -> dict:
+    h, hd, st = mamba_dims(cfg)
+    din = h * hd
+    return {
+        "ssm": jnp.zeros((b, h, st, hd), jnp.float32),
+        "conv": jnp.zeros((b, CONV_W - 1, din + 2 * st), dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 (Finch)
+# ---------------------------------------------------------------------------
+
+RWKV_LORA = 64
+
+
+def init_rwkv(key: jax.Array, cfg: ModelConfig, n_layers: int, dtype) -> dict:
+    d = cfg.d_model
+    h = cfg.n_heads
+    hd = d // h
+    ks = jax.random.split(key, 12)
+    sc = d ** -0.5
+    return {
+        # time mix
+        "mix": 0.5 * jnp.ones((n_layers, 5, d), dtype),       # r,k,v,g,w mixes
+        "wr": jax.random.normal(ks[0], (n_layers, d, d), dtype) * sc,
+        "wk": jax.random.normal(ks[1], (n_layers, d, d), dtype) * sc,
+        "wv": jax.random.normal(ks[2], (n_layers, d, d), dtype) * sc,
+        "wg": jax.random.normal(ks[3], (n_layers, d, d), dtype) * sc,
+        "wo": jax.random.normal(ks[4], (n_layers, d, d), dtype) * sc,
+        "w_base": -6.0 * jnp.ones((n_layers, d), jnp.float32),
+        "w_lora_a": jax.random.normal(ks[5], (n_layers, d, RWKV_LORA), dtype)
+        * sc,
+        "w_lora_b": jax.random.normal(ks[6], (n_layers, RWKV_LORA, d), dtype)
+        * RWKV_LORA ** -0.5,
+        "u": jax.random.normal(ks[7], (n_layers, h, hd), jnp.float32) * 0.3,
+        "ln_x_scale": jnp.ones((n_layers, d), dtype),
+        "ln_x_bias": jnp.zeros((n_layers, d), dtype),
+        # channel mix
+        "cmix": 0.5 * jnp.ones((n_layers, 2, d), dtype),
+        "ck": jax.random.normal(ks[8], (n_layers, d, cfg.d_ff), dtype) * sc,
+        "cv": jax.random.normal(ks[9], (n_layers, cfg.d_ff, d), dtype)
+        * cfg.d_ff ** -0.5,
+        "cr": jax.random.normal(ks[10], (n_layers, d, d), dtype) * sc,
+    }
+
+
+def _token_shift(x: jax.Array, prev: Optional[jax.Array]):
+    """x_{t-1} stream; ``prev``: (B,1,d) carried last token (decode)."""
+    b, s, d = x.shape
+    if prev is None:
+        prev = jnp.zeros((b, 1, d), x.dtype)
+    return jnp.concatenate([prev, x[:, :-1]], axis=1), x[:, -1:]
+
+
+def rwkv_time_mix(
+    p: dict, x: jax.Array, cfg: ModelConfig, *,
+    state: Optional[dict], decode: bool,
+    ctx: Optional[AnalogCtx] = None, aux: Optional[dict] = None,
+):
+    b, s, d = x.shape
+    h = cfg.n_heads
+    hd = d // h
+    prev = None if state is None else state["shift_t"]
+    xs, last = _token_shift(x, prev)
+
+    def mix(i):
+        m = p["mix"][i][None, None]
+        return x * m + xs * (1.0 - m)
+
+    r = dense(mix(0), p["wr"], "rwkv_wr", ctx, aux).reshape(b, s, h, hd)
+    k = dense(mix(1), p["wk"], "rwkv_wk", ctx, aux).reshape(b, s, h, hd)
+    v = dense(mix(2), p["wv"], "rwkv_wv", ctx, aux).reshape(b, s, h, hd)
+    g = dense(mix(3), p["wg"], "rwkv_wg", ctx, aux)
+
+    # Finch: data-dependent decay via low-rank MLP on the mixed stream
+    lora = jnp.tanh(mix(4) @ p["w_lora_a"]) @ p["w_lora_b"]
+    log_w = -jnp.exp(
+        jnp.clip(p["w_base"][None, None].astype(jnp.float32)
+                 + lora.astype(jnp.float32), -8.0, 2.0)
+    )
+    log_w = log_w.reshape(b, s, h, hd)
+
+    s0 = None if state is None else state["wkv"]
+    if decode:
+        y1, new_wkv = decay_step(
+            r[:, 0], k[:, 0], v[:, 0], log_w[:, 0],
+            s0 if s0 is not None else jnp.zeros((b, h, hd, hd), jnp.float32),
+            u=p["u"],
+        )
+        y = y1[:, None]
+    else:
+        y, new_wkv = chunked_decay_recurrence(
+            r, k, v, log_w, u=p["u"], s0=s0, chunk=32
+        )
+
+    y = y.reshape(b, s, d)
+    # per-head group norm
+    yh = y.reshape(b, s, h, hd).astype(jnp.float32)
+    mu = jnp.mean(yh, axis=-1, keepdims=True)
+    var = jnp.var(yh, axis=-1, keepdims=True)
+    yh = (yh - mu) * jax.lax.rsqrt(var + 64e-5)
+    y = yh.reshape(b, s, d).astype(x.dtype) * p["ln_x_scale"] + p["ln_x_bias"]
+    y = y * jax.nn.silu(g)
+    out = dense(y, p["wo"], "rwkv_wo", ctx, aux)
+    return out, {"wkv": new_wkv, "shift_t": last}
+
+
+def rwkv_channel_mix(
+    p: dict, x: jax.Array, *, state: Optional[dict], decode: bool,
+    ctx: Optional[AnalogCtx] = None, aux: Optional[dict] = None,
+):
+    prev = None if state is None else state["shift_c"]
+    xs, last = _token_shift(x, prev)
+    mk = p["cmix"][0][None, None]
+    mr = p["cmix"][1][None, None]
+    xk = x * mk + xs * (1.0 - mk)
+    xr = x * mr + xs * (1.0 - mr)
+    kk = jnp.square(jax.nn.relu(dense(xk, p["ck"], "rwkv_ck", ctx, aux)))
+    rr = jax.nn.sigmoid(dense(xr, p["cr"], "rwkv_cr", ctx, aux))
+    out = rr * dense(kk, p["cv"], "rwkv_cv", ctx, aux)
+    return out, {"shift_c": last}
+
+
+def rwkv_state_init(cfg: ModelConfig, b: int, dtype) -> dict:
+    d = cfg.d_model
+    h = cfg.n_heads
+    hd = d // h
+    return {
+        "wkv": jnp.zeros((b, h, hd, hd), jnp.float32),
+        "shift_t": jnp.zeros((b, 1, d), dtype),
+        "shift_c": jnp.zeros((b, 1, d), dtype),
+    }

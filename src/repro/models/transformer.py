@@ -1,0 +1,356 @@
+"""Decoder-only LM covering the dense / moe / vlm / ssm(rwkv) families.
+
+Layers are scanned (stacked params, one traced block body) so 94-layer
+configs lower to compact HLO.  The same block body serves training
+(no cache), prefill (returns a cache) and decode (single-token cache
+update) — the cache travels through the scan as per-layer xs/ys.
+
+The analog execution path threads an :class:`AnalogPack` whose per-layer
+conductance stacks are scanned alongside the parameters; see
+``repro.serve.analog_engine`` for programming/calibration.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.config import ModelConfig
+from repro.core.analog import AnalogSpec, AnalogWeights
+from repro.models import ssm as ssm_mod
+from repro.models.attention import attention_block, init_attention
+from repro.models.layers import AnalogCtx, dense, norm, rms_norm
+from repro.models.mlp import init_mlp, init_moe, mlp_block, moe_block
+
+GLOBAL_WINDOW = 1 << 30
+
+NO_CAST = ("a_log", "dt_bias", "u", "w_base", "d_skip", "router")
+
+
+def cast_params(params, dtype):
+    """Cast float params to the compute dtype, keeping numerically
+    sensitive leaves (decay logs, router) in fp32."""
+
+    def f(path, x):
+        name = str(path[-1].key) if hasattr(path[-1], "key") else ""
+        if x.dtype == jnp.float32 and name not in NO_CAST:
+            return x.astype(dtype)
+        return x
+
+    return jax.tree_util.tree_map_with_path(f, params)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class AnalogPack:
+    """Layer-stacked analog weights + calibrated ranges for the LM."""
+
+    spec: AnalogSpec = dataclasses.field(metadata=dict(static=True))
+    layer_weights: Dict[str, AnalogWeights]     # arrays stacked over L
+    layer_lo: Dict[str, jax.Array]              # (L, S)
+    layer_hi: Dict[str, jax.Array]
+    layer_act: Dict[str, jax.Array]             # (L,)
+    head: Optional[AnalogWeights] = None        # lm_head
+    head_lo: Optional[jax.Array] = None
+    head_hi: Optional[jax.Array] = None
+    head_act: Optional[jax.Array] = None
+    collect: bool = dataclasses.field(default=False, metadata=dict(static=True))
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> dict:
+    """fp32 master parameters."""
+    ks = jax.random.split(key, 8)
+    d, l, v = cfg.d_model, cfg.n_layers, cfg.vocab
+    dt = jnp.float32
+    p: Dict[str, Any] = {
+        "embed": jax.random.normal(ks[0], (v, d), dt) * d ** -0.5,
+        "final_norm": {"scale": jnp.zeros((d,), dt)},
+    }
+    if cfg.norm == "layernorm":
+        p["final_norm"] = {"scale": jnp.ones((d,), dt),
+                           "bias": jnp.zeros((d,), dt)}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = jax.random.normal(ks[1], (d, v), dt) * d ** -0.5
+
+    layers: Dict[str, Any] = {}
+    if cfg.rwkv:
+        layers["rwkv"] = ssm_mod.init_rwkv(ks[2], cfg, l, dt)
+        layers["norm1"] = _norm_init(cfg, l, dt)
+        layers["norm2"] = _norm_init(cfg, l, dt)
+    else:
+        layers["attn"] = init_attention(ks[2], cfg, l, dt)
+        layers["norm1"] = _norm_init(cfg, l, dt)
+        layers["norm2"] = _norm_init(cfg, l, dt)
+        if cfg.n_experts:
+            layers["moe"] = init_moe(ks[3], cfg, l, dt)
+            if cfg.dense_residual:
+                layers["mlp"] = init_mlp(ks[4], d, cfg.d_ff, cfg.act, l, dt)
+        else:
+            layers["mlp"] = init_mlp(ks[4], d, cfg.d_ff, cfg.act, l, dt)
+    p["layers"] = layers
+    return p
+
+
+def _norm_init(cfg: ModelConfig, l: int, dt) -> dict:
+    if cfg.norm == "layernorm":
+        return {"scale": jnp.ones((l, cfg.d_model), dt),
+                "bias": jnp.zeros((l, cfg.d_model), dt)}
+    return {"scale": jnp.zeros((l, cfg.d_model), dt)}
+
+
+def layer_windows(cfg: ModelConfig) -> Optional[jax.Array]:
+    """Per-layer attention window (gemma3's N local : 1 global pattern)."""
+    if cfg.sliding_window is None:
+        return None
+    if cfg.local_global_ratio == 0:
+        return jnp.full((cfg.n_layers,), cfg.sliding_window, jnp.int32)
+    period = cfg.local_global_ratio + 1
+    idx = jnp.arange(cfg.n_layers)
+    is_global = (idx % period) == (period - 1)
+    return jnp.where(is_global, GLOBAL_WINDOW, cfg.sliding_window)
+
+
+# ---------------------------------------------------------------------------
+# block body
+# ---------------------------------------------------------------------------
+
+
+def _block(
+    cfg: ModelConfig,
+    p_l: dict,
+    x: jax.Array,
+    *,
+    positions,
+    window,
+    cache_l: Optional[dict],
+    cache_len,
+    actx: Optional[AnalogCtx],
+) -> Tuple[jax.Array, Optional[dict], dict]:
+    aux: Dict[str, jax.Array] = {}
+    if cfg.rwkv:
+        st = cache_l["rwkv"] if cache_l is not None else None
+        h, new_t = ssm_mod.rwkv_time_mix(
+            p_l["rwkv"], norm(x, p_l["norm1"], cfg.norm), cfg,
+            state=st, decode=cache_len is not None and st is not None,
+            ctx=actx, aux=aux,
+        )
+        x = x + h
+        h, new_c = ssm_mod.rwkv_channel_mix(
+            p_l["rwkv"], norm(x, p_l["norm2"], cfg.norm),
+            state=st, decode=cache_len is not None and st is not None,
+            ctx=actx, aux=aux,
+        )
+        x = x + h
+        new_cache = {"rwkv": {**new_t, **new_c}}
+        return x, new_cache, aux
+
+    h, new_kv = attention_block(
+        p_l["attn"], norm(x, p_l["norm1"], cfg.norm), cfg,
+        positions=positions, window=window,
+        cache=cache_l["attn"] if cache_l is not None else None,
+        cache_len=cache_len, ctx=actx, aux=aux,
+    )
+    x = x + h
+    h2_in = norm(x, p_l["norm2"], cfg.norm)
+    if cfg.n_experts:
+        h, _ = moe_block(p_l["moe"], h2_in, cfg, ctx=actx, aux=aux)
+        if cfg.dense_residual:
+            h = h + mlp_block(p_l["mlp"], h2_in, cfg.act, actx, aux)
+    else:
+        h = mlp_block(p_l["mlp"], h2_in, cfg.act, actx, aux)
+    x = x + h
+    return x, {"attn": new_kv}, aux
+
+
+def _make_actx(pack: Optional[AnalogPack], sliced) -> Optional[AnalogCtx]:
+    if pack is None:
+        return None
+    w, lo, hi, act = sliced
+    return AnalogCtx(spec=pack.spec, weights=w, lo=lo, hi=hi, act=act,
+                     collect=pack.collect)
+
+
+def _scan_layers(
+    cfg: ModelConfig,
+    params: dict,
+    x: jax.Array,
+    *,
+    positions,
+    cache: Optional[dict],
+    cache_len,
+    pack: Optional[AnalogPack],
+    remat: bool,
+):
+    windows = layer_windows(cfg)
+    xs = {"p": params["layers"]}
+    if windows is not None:
+        xs["w"] = windows
+    if cache is not None:
+        xs["c"] = cache
+    if pack is not None:
+        xs["a"] = (pack.layer_weights, pack.layer_lo, pack.layer_hi,
+                   pack.layer_act)
+
+    def body(x, xs_l):
+        actx = _make_actx(pack, xs_l.get("a")) if pack is not None else None
+        window = xs_l.get("w")
+        x, new_cache, aux = _block(
+            cfg, xs_l["p"], x,
+            positions=positions, window=window,
+            cache_l=xs_l.get("c"), cache_len=cache_len, actx=actx,
+        )
+        return x, {"cache": new_cache, "aux": aux}
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, ys = lax.scan(body, x, xs)
+    return x, ys["cache"], ys["aux"]
+
+
+# ---------------------------------------------------------------------------
+# public entry points
+# ---------------------------------------------------------------------------
+
+
+def forward(
+    cfg: ModelConfig,
+    params: dict,
+    tokens: jax.Array,                 # (B, S) int32
+    *,
+    prefix_embeds: Optional[jax.Array] = None,   # (B, P, d) vlm stub
+    pack: Optional[AnalogPack] = None,
+    remat: Optional[bool] = None,
+) -> Tuple[jax.Array, dict]:
+    """Training/eval forward: returns (logits, aux)."""
+    dtype = jnp.dtype(cfg.dtype)
+    cp = cast_params(params, dtype)
+    x = _embed(cfg, cp, tokens, prefix_embeds, dtype)
+    x = _maybe_seq_shard(x)
+    positions = jnp.arange(tokens.shape[1])
+    remat = cfg.remat if remat is None else remat
+    x, _, aux = _scan_layers(
+        cfg, cp, x, positions=positions, cache=None, cache_len=None,
+        pack=pack, remat=remat,
+    )
+    if pack is not None and pack.collect:
+        aux["final_hidden"] = norm(x, cp["final_norm"], cfg.norm)
+    logits = _head(cfg, cp, x, pack)
+    return logits, aux
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    dtype = jnp.dtype(cfg.dtype)
+    l = cfg.n_layers
+    if cfg.rwkv:
+        st = ssm_mod.rwkv_state_init(cfg, batch, dtype)
+        return {
+            "layers": {"rwkv": jax.tree.map(
+                lambda a: jnp.broadcast_to(a[None], (l,) + a.shape), st)},
+            "len": jnp.zeros((), jnp.int32),
+        }
+    kv, hd = cfg.n_kv_heads, cfg.hd
+    kvs = {
+        "k": jnp.zeros((l, batch, max_len, kv, hd), dtype),
+        "v": jnp.zeros((l, batch, max_len, kv, hd), dtype),
+    }
+    return {"layers": {"attn": kvs}, "len": jnp.zeros((), jnp.int32)}
+
+
+def prefill(
+    cfg: ModelConfig,
+    params: dict,
+    tokens: jax.Array,
+    max_len: int,
+    *,
+    prefix_embeds: Optional[jax.Array] = None,
+    pack: Optional[AnalogPack] = None,
+) -> Tuple[jax.Array, dict]:
+    """Process a prompt, returning (last-token logits, cache)."""
+    b, s = tokens.shape
+    dtype = jnp.dtype(cfg.dtype)
+    cp = cast_params(params, dtype)
+    x = _embed(cfg, cp, tokens, prefix_embeds, dtype)
+    x = _maybe_seq_shard(x)
+    positions = jnp.arange(s)
+    x, new_cache, _ = _scan_layers(
+        cfg, cp, x, positions=positions, cache=None, cache_len=None,
+        pack=pack, remat=False,
+    )
+    logits = _head(cfg, cp, x[:, -1:], pack)
+    if cfg.rwkv:
+        cache = {"layers": new_cache, "len": jnp.asarray(s, jnp.int32)}
+    else:
+        kv = new_cache["attn"]
+        pad = max_len - s
+        kv = jax.tree.map(
+            lambda a: jnp.pad(a, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))),
+            kv,
+        )
+        cache = {"layers": {"attn": kv}, "len": jnp.asarray(s, jnp.int32)}
+    return logits, cache
+
+
+def decode_step(
+    cfg: ModelConfig,
+    params: dict,
+    token: jax.Array,                  # (B, 1)
+    cache: dict,
+    *,
+    pack: Optional[AnalogPack] = None,
+) -> Tuple[jax.Array, dict]:
+    """One decode step with a KV/state cache."""
+    dtype = jnp.dtype(cfg.dtype)
+    cp = cast_params(params, dtype)
+    x = _embed(cfg, cp, token, None, dtype)
+    t = cache["len"]
+    positions = t + jnp.arange(1)[None, :]
+    x, new_cache, _ = _scan_layers(
+        cfg, cp, x, positions=positions, cache=cache["layers"], cache_len=t,
+        pack=pack, remat=False,
+    )
+    logits = _head(cfg, cp, x, pack)
+    return logits, {"layers": new_cache, "len": t + 1}
+
+
+# ---------------------------------------------------------------------------
+
+
+def _maybe_seq_shard(x):
+    from repro.sharding.perf import FLAGS, constrain_bs
+
+    if FLAGS.seq_parallel_attn and x.shape[1] > 1:
+        return constrain_bs(x, seq=True)
+    return x
+
+
+def _embed(cfg, cp, tokens, prefix_embeds, dtype):
+    x = cp["embed"][tokens].astype(dtype)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, dtype)
+    if prefix_embeds is not None:
+        p = prefix_embeds.shape[1]
+        x = lax.dynamic_update_slice(x, prefix_embeds.astype(dtype), (0, 0, 0))
+        del p
+    return x
+
+
+def _head(cfg, cp, x, pack: Optional[AnalogPack]):
+    x = norm(x, cp["final_norm"], cfg.norm)
+    w = cp["embed"].T if cfg.tie_embeddings else cp["lm_head"]
+    if pack is not None and pack.head is not None and not pack.collect:
+        from repro.core.analog import analog_matmul
+
+        y = analog_matmul(x, pack.head, pack.spec, adc_lo=pack.head_lo,
+                          adc_hi=pack.head_hi, act_hi=pack.head_act)
+        return y.astype(jnp.float32)
+    return (x @ w).astype(jnp.float32)

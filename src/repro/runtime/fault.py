@@ -1,0 +1,119 @@
+"""Fault tolerance & straggler mitigation for the training runtime.
+
+On a real cluster the failure domains are: device loss (XLA raises), host
+loss (process death — covered by checkpoint/restart + deterministic data
+replay), and slow nodes.  This module provides the single-process pieces:
+
+* ``resilient_step`` — retries a step on transient errors with exponential
+  backoff; non-transient (deterministic) errors re-raise immediately.
+  After ``max_retries`` it raises ``StepFailed`` so the launcher can
+  checkpoint-restart (or shrink the mesh — see ``elastic.py``).
+* ``StragglerMonitor`` — tracks per-step wall times, flags ``> mean +
+  k*std`` outliers, and calls an eviction hook.  On multi-pod deployments
+  the hook would demote the slow host and trigger an elastic restart; here
+  it records the event (tested with injected delays).
+* ``Heartbeat`` — a daemon-thread liveness file (mtime = last heartbeat),
+  the signal an external supervisor (k8s / SLURM) watches.
+"""
+
+from __future__ import annotations
+
+import os
+import statistics
+import threading
+import time
+from typing import Callable, List, Optional, Tuple
+
+TRANSIENT_ERRORS = (OSError, RuntimeError)
+
+
+class StepFailed(RuntimeError):
+    pass
+
+
+def resilient_step(
+    fn: Callable,
+    *args,
+    max_retries: int = 3,
+    backoff_s: float = 0.05,
+    transient: Tuple = TRANSIENT_ERRORS,
+    on_retry: Optional[Callable[[int, BaseException], None]] = None,
+    **kwargs,
+):
+    attempt = 0
+    while True:
+        try:
+            return fn(*args, **kwargs)
+        except transient as e:  # pragma: no branch
+            attempt += 1
+            if on_retry is not None:
+                on_retry(attempt, e)
+            if attempt > max_retries:
+                raise StepFailed(
+                    f"step failed after {max_retries} retries: {e!r}"
+                ) from e
+            time.sleep(backoff_s * (2 ** (attempt - 1)))
+
+
+class StragglerMonitor:
+    def __init__(self, *, k_sigma: float = 3.0, window: int = 50,
+                 min_samples: int = 10,
+                 on_straggler: Optional[Callable[[int, float], None]] = None):
+        self.k = k_sigma
+        self.window = window
+        self.min_samples = min_samples
+        self.on_straggler = on_straggler
+        self.times: List[float] = []
+        self.flagged: List[Tuple[int, float]] = []
+        self._step = 0
+
+    def record(self, dt: float) -> bool:
+        """Record one step duration; returns True if flagged."""
+        self._step += 1
+        hist = self.times[-self.window:]
+        flagged = False
+        if len(hist) >= self.min_samples:
+            mu = statistics.fmean(hist)
+            sd = statistics.pstdev(hist) or 1e-9
+            if dt > mu + self.k * sd:
+                flagged = True
+                self.flagged.append((self._step, dt))
+                if self.on_straggler is not None:
+                    self.on_straggler(self._step, dt)
+        self.times.append(dt)
+        return flagged
+
+    def timed(self, fn: Callable, *args, **kwargs):
+        t0 = time.perf_counter()
+        out = fn(*args, **kwargs)
+        self.record(time.perf_counter() - t0)
+        return out
+
+
+class Heartbeat:
+    def __init__(self, path: str, interval_s: float = 5.0):
+        self.path = path
+        self.interval = interval_s
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+
+    def start(self):
+        def beat():
+            while not self._stop.wait(self.interval):
+                self._touch()
+
+        self._touch()
+        self._thread = threading.Thread(target=beat, daemon=True)
+        self._thread.start()
+
+    def _touch(self):
+        with open(self.path, "w") as f:
+            f.write(str(time.time()))
+
+    def stop(self):
+        self._stop.set()
+        if self._thread:
+            self._thread.join()
+
+    def age(self) -> float:
+        return time.time() - os.path.getmtime(self.path)

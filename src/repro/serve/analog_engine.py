@@ -1,0 +1,154 @@
+"""Analog LM serving: program a trained LM onto simulated analog arrays,
+calibrate its ADC ranges, and serve through the analog pipeline.
+
+Pipeline (paper Sec. 4):
+
+1. ``program_lm``    — every weight-stationary projection of every layer is
+   quantized, mapped (per the AnalogSpec), and perturbed with program-time
+   cell errors.  Per-layer PRNG keys are folded from the layer index.
+2. ``calibrate_lm``  — two collect passes over a calibration batch:
+   phase 1 records per-layer activation ranges (L1-optimal clip of the
+   matmul *inputs*, Sec. 4.3); phase 2 re-runs with those clips installed
+   and records the inner-99.98% pre-ADC ranges per (layer, slice)
+   (Sec. 6.2), power-of-two constrained for sliced mappings.
+3. ``analog pack`` feeds ``repro.models.transformer`` forward/prefill/
+   decode — the same scanned model body, conductances scanned alongside
+   parameters.
+
+Scope: the dense/vlm/ssm(rwkv) transformer family (the paper's technique
+targets weight-stationary MVMs; see DESIGN.md §Arch-applicability for the
+MoE-expert / recurrence caveats).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.core import calibrate as cal
+from repro.core.analog import AnalogSpec, AnalogWeights, program
+from repro.core.quant import calibrate_act_range
+from repro.models.registry import get_model
+from repro.models.transformer import AnalogPack, cast_params, forward
+
+#: weight leaves programmed to analog arrays, per family
+DENSE_NAMES = {
+    "attn": ("wq", "wk", "wv", "wo"),
+    "mlp": ("w_gate", "w_up", "w_down"),
+}
+RWKV_NAMES = {
+    "rwkv": ("wr", "wk", "wv", "wg", "wo", "ck", "cv", "cr"),
+}
+# analog hook names used inside the blocks (see models/*.py dense() calls)
+HOOK_NAME = {
+    ("attn", "wq"): "wq", ("attn", "wk"): "wk", ("attn", "wv"): "wv",
+    ("attn", "wo"): "wo",
+    ("mlp", "w_gate"): "w_gate", ("mlp", "w_up"): "w_up",
+    ("mlp", "w_down"): "w_down",
+    ("rwkv", "wr"): "rwkv_wr", ("rwkv", "wk"): "rwkv_wk",
+    ("rwkv", "wv"): "rwkv_wv", ("rwkv", "wg"): "rwkv_wg",
+    ("rwkv", "wo"): "rwkv_wo", ("rwkv", "ck"): "rwkv_ck",
+    ("rwkv", "cv"): "rwkv_cv", ("rwkv", "cr"): "rwkv_cr",
+}
+
+
+def _program_stack(w_stack: jax.Array, spec: AnalogSpec,
+                   key: jax.Array) -> AnalogWeights:
+    """vmap ``program`` over the layer axis of (L, K, N)."""
+    l = w_stack.shape[0]
+    keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(jnp.arange(l))
+    return jax.vmap(lambda w, k: program(w, spec, k))(w_stack, keys)
+
+
+def program_lm(cfg: ModelConfig, params: dict, spec: AnalogSpec,
+               key: jax.Array, *, include_head: bool = True) -> AnalogPack:
+    groups = RWKV_NAMES if cfg.rwkv else DENSE_NAMES
+    layer_weights: Dict[str, AnalogWeights] = {}
+    cp = params["layers"]
+    i = 0
+    for parent, leaves in groups.items():
+        for leaf in leaves:
+            if parent not in cp or leaf not in cp[parent]:
+                continue
+            name = HOOK_NAME[(parent, leaf)]
+            layer_weights[name] = _program_stack(
+                cp[parent][leaf].astype(jnp.float32), spec,
+                jax.random.fold_in(key, i))
+            i += 1
+    head = None
+    if include_head:
+        w = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+        head = program(w.astype(jnp.float32), spec,
+                       jax.random.fold_in(key, 10_000))
+    s = spec.mapping.n_slices
+    l = cfg.n_layers
+    zeros = {n: jnp.zeros((l, s)) for n in layer_weights}
+    return AnalogPack(
+        spec=spec, layer_weights=layer_weights,
+        layer_lo=zeros, layer_hi={n: jnp.ones((l, s)) for n in layer_weights},
+        layer_act={}, head=head,
+        head_lo=jnp.zeros((s,)), head_hi=jnp.ones((s,)),
+        head_act=None, collect=False,
+    )
+
+
+def calibrate_lm(cfg: ModelConfig, params: dict, pack: AnalogPack,
+                 calib_tokens: jax.Array,
+                 prefix_embeds=None) -> AnalogPack:
+    """Two-phase range calibration; returns a serving-ready pack."""
+    api = get_model(cfg)
+
+    # ---- phase 1: activation clip ranges (digital run, collect inputs) ---
+    pack1 = dataclasses.replace(pack, collect=True)
+    _, aux1 = api.forward(cfg, params, calib_tokens, pack=pack1,
+                          **({"prefix_embeds": prefix_embeds}
+                             if prefix_embeds is not None else {}))
+    act = {}
+    for k, v in aux1.items():
+        if k.startswith("act/"):
+            act[k[len("act/"):]] = v            # (L,) per-layer clip
+    pack2 = dataclasses.replace(pack, layer_act=act, collect=True)
+
+    # ---- phase 2: pre-ADC ranges with activation clips installed ---------
+    _, aux2 = api.forward(cfg, params, calib_tokens, pack=pack2,
+                          **({"prefix_embeds": prefix_embeds}
+                             if prefix_embeds is not None else {}))
+    lo, hi = {}, {}
+    for k, v in aux2.items():
+        if not k.startswith("adc/"):
+            continue
+        name = k[len("adc/"):]
+        lo_s, hi_s = v[..., 0], v[..., 1]       # (L, S)
+        if pack.spec.mapping.sliced:
+            lo_s, hi_s = jax.vmap(cal.constrain_power_of_two)(lo_s, hi_s)
+        lo[name], hi[name] = lo_s, hi_s
+
+    # head calibration on the true final-norm hiddens (emitted by the
+    # collect forward)
+    head_lo, head_hi, head_act = pack.head_lo, pack.head_hi, None
+    if pack.head is not None:
+        from repro.core.analog import analog_matmul
+
+        x = aux2["final_hidden"].reshape(-1, cfg.d_model)
+        _, head_act = calibrate_act_range(x, pack.spec.input_bits)
+        _, stats = analog_matmul(
+            x, pack.head, pack.spec, act_hi=head_act, collect=True)
+        head_lo, head_hi = stats[:, 0], stats[:, 1]
+
+    return dataclasses.replace(
+        pack, layer_lo=lo, layer_hi=hi, layer_act=act,
+        head_lo=head_lo, head_hi=head_hi, head_act=head_act, collect=False,
+    )
+
+
+def analog_eval_loss(cfg: ModelConfig, params: dict, pack: AnalogPack,
+                     tokens: jax.Array, targets: jax.Array) -> jax.Array:
+    """Cross-entropy of the analog model (accuracy metric for sweeps)."""
+    logits, _ = forward(cfg, params, tokens, pack=pack, remat=False)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)

@@ -1,0 +1,101 @@
+"""Performance-iteration flags (EXPERIMENTS.md §Perf).
+
+Each flag is one hypothesis from the hillclimbing log; the baseline is all
+defaults.  Flags are process-global (set by the dry-run CLI per variant)
+and read at trace time.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+
+
+@dataclasses.dataclass
+class PerfFlags:
+    #: only shard attention q/kv projections on "model" when the *head
+    #: count* divides the axis (instead of the flattened heads*hd dim) —
+    #: avoids within-head splits and the involuntary-remat resharding storm
+    strict_heads: bool = False
+    #: context-parallel attention: shard the sequence dim over "model"
+    #: around the attention block (for archs whose heads cannot shard)
+    seq_parallel_attn: bool = False
+    #: with_sharding_constraint on the MoE dispatch buffers so the
+    #: token->expert scatter lowers to an all-to-all instead of
+    #: replicate+all-reduce
+    moe_dispatch_sharding: bool = False
+    #: gather expert weights over the data axis before the expert einsums
+    #: (instead of all-reducing the f-dim contraction partial sums)
+    moe_weight_gather: bool = False
+    #: 2D expert parallelism: shard the capacity dim of the dispatch buffer
+    #: over the data axis so expert compute distributes over all chips
+    moe_cap_shard: bool = False
+    #: FSDP (data-axis) sharding of parameters; turning it off for serve
+    #: removes per-layer weight all-gathers at the cost of replicated
+    #: weight memory
+    fsdp_params: bool = True
+    #: gradient-compression path for the cross-pod all-reduce
+    compress_pod_grads: bool = False
+
+
+FLAGS = PerfFlags()
+
+VARIANTS = {
+    "baseline": {},
+    "strict_heads": {"strict_heads": True},
+    "seqpar": {"strict_heads": True, "seq_parallel_attn": True},
+    "moe_shard": {"moe_dispatch_sharding": True},
+    "moe_shard_strict": {"moe_dispatch_sharding": True, "strict_heads": True},
+    "nofsdp": {"fsdp_params": False},
+    "nofsdp_strict": {"fsdp_params": False, "strict_heads": True},
+    "all_serve": {"fsdp_params": False, "strict_heads": True,
+                  "moe_dispatch_sharding": True},
+    "nofsdp_seqpar": {"fsdp_params": False, "strict_heads": True,
+                      "seq_parallel_attn": True},
+    "moe_wgather": {"moe_weight_gather": True},
+    "moe_ep2d": {"moe_weight_gather": True, "moe_cap_shard": True},
+    "moe_wgather_seqpar": {"moe_weight_gather": True,
+                           "seq_parallel_attn": True},
+    "seqpar_nofsdp": {"strict_heads": True, "seq_parallel_attn": True,
+                      "fsdp_params": False},
+}
+
+
+@contextlib.contextmanager
+def variant(name: str):
+    global FLAGS
+    old = dataclasses.replace(FLAGS)
+    for k, v in VARIANTS[name].items():
+        setattr(FLAGS, k, v)
+    try:
+        yield FLAGS
+    finally:
+        FLAGS = old
+        globals()["FLAGS"] = old
+
+
+def constraint(x, *spec):
+    """with_sharding_constraint that no-ops outside a mesh context."""
+    import jax
+    from jax.sharding import PartitionSpec as P
+
+    try:
+        return jax.lax.with_sharding_constraint(x, P(*spec))
+    except Exception:
+        return x
+
+
+def constrain_bs(x, *, seq: bool):
+    """Constrain (B, S, ...) activations: batch over the dp axes, sequence
+    over "model" when ``seq`` (whole-stream sequence parallelism)."""
+    import jax
+    from jax.sharding import PartitionSpec as P
+
+    rest = [None] * (x.ndim - 2)
+    for batch_ax in (("pod", "data"), "data", None):
+        try:
+            return jax.lax.with_sharding_constraint(
+                x, P(batch_ax, "model" if seq else None, *rest))
+        except Exception:
+            continue
+    return x

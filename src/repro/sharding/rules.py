@@ -1,0 +1,235 @@
+"""Logical-axis sharding rules (MaxText-style, pytree-path driven).
+
+Every parameter/optimizer/cache/batch leaf is assigned a PartitionSpec by
+classifying its dims from its pytree path.  The mesh axes:
+
+* ``model`` — tensor parallel: heads / ff / vocab / experts dims.
+* ``data`` (+ ``pod``) — batch (activations), and FSDP/ZeRO sharding of the
+  d_model dim of weights and optimizer moments.
+
+Divisibility is checked per-dim; a dim that does not divide falls back to
+replication (e.g. zamba's 56 ssm heads over 16 model shards).  Flattened
+head dims (H*hd) shard on ``model`` even when H < n_model — GSPMD then
+splits within heads and inserts the needed collectives; this compiles
+everywhere and shows up in the roofline as a hillclimbing lever rather
+than a hard failure (see EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.config import ModelConfig
+from repro.launch.mesh import dp_axes, model_size
+
+# (parent, leaf) or leaf -> logical dims (layer dim added automatically for
+# stacked leaves by matching rank)
+LOGICAL = {
+    "embed": ("vocab", "emb"),
+    "lm_head": ("emb", "vocab"),
+    "enc_in": ("emb", "emb2"),
+    "wq": ("emb", "tp"),
+    "wk": ("emb", "tp_kv"),
+    "wv": ("emb", "tp_kv"),
+    "wo": ("tp", "emb"),
+    "bq": ("tp",),
+    "bk": ("tp_kv",),
+    "bv": ("tp_kv",),
+    "w_up": ("emb", "tp"),
+    "w_gate": ("emb", "tp"),
+    "w_down": ("tp", "emb"),
+    ("moe", "router"): ("emb", "rep"),
+    ("moe", "w_up"): ("expert", "emb", "tp_inner"),
+    ("moe", "w_gate"): ("expert", "emb", "tp_inner"),
+    ("moe", "w_down"): ("expert", "tp_inner", "emb"),
+    # mamba
+    "in_proj": ("emb", "tp"),
+    "out_proj": ("tp", "emb"),
+    "conv_w": ("rep", "tp"),
+    # rwkv
+    "wr": ("emb", "tp"),
+    "wg": ("emb", "tp"),
+    "ck": ("emb", "tp"),
+    "cv": ("tp", "emb"),
+    "cr": ("emb", "tp"),
+    "w_lora_a": ("emb", "rep"),
+    "w_lora_b": ("rep", "emb"),
+}
+
+REPLICATED_LEAVES = {
+    "scale", "bias", "a_log", "dt_bias", "d_skip", "out_norm", "mix",
+    "cmix", "u", "w_base", "ln_x_scale", "ln_x_bias", "q_norm", "k_norm",
+}
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    return tuple(
+        str(p.key) if hasattr(p, "key") else str(getattr(p, "idx", p))
+        for p in path
+    )
+
+
+def _lookup(names: Tuple[str, ...]):
+    leaf = names[-1]
+    for parent in reversed(names[:-1]):
+        if (parent, leaf) in LOGICAL:
+            return LOGICAL[(parent, leaf)]
+    return LOGICAL.get(leaf)
+
+
+def _assign(logical: Tuple[str, ...], shape: Tuple[int, ...], mesh,
+            *, fsdp: bool, cfg: Optional[ModelConfig] = None) -> P:
+    from repro.sharding.perf import FLAGS
+
+    nm = model_size(mesh)
+    dp = dp_axes(mesh)
+    dp_total = 1
+    for a in dp:
+        dp_total *= mesh.shape[a]
+    # rank difference = leading stacked dims (layers / slices): replicated
+    extra = len(shape) - len(logical)
+    spec = [None] * extra
+    used_data = False
+    for dim, size in zip(logical, shape[extra:]):
+        ax = None
+        if dim in ("tp", "tp_kv", "vocab") and nm > 1 and size % nm == 0:
+            ax = "model"
+            if FLAGS.strict_heads and cfg is not None and dim in ("tp", "tp_kv"):
+                # only shard projections on heads when whole heads divide
+                heads = cfg.n_heads if dim == "tp" else cfg.n_kv_heads
+                is_attn = size in (cfg.n_heads * cfg.hd,
+                                   cfg.n_kv_heads * cfg.hd)
+                if is_attn and heads % nm != 0:
+                    ax = None
+        elif dim == "expert" and nm > 1 and size % nm == 0:
+            ax = "model"
+        elif dim in ("emb", "tp_inner") and not used_data:
+            if (fsdp and FLAGS.fsdp_params and dp_total > 1
+                    and size % dp_total == 0):
+                ax = dp if len(dp) > 1 else dp[0]
+                used_data = True
+        spec.append(ax)
+    return P(*spec)
+
+
+def param_spec(cfg: ModelConfig, path, shape, mesh, *, fsdp: bool = True) -> P:
+    names = _path_names(path)
+    if names[-1] in REPLICATED_LEAVES:
+        return P()
+    logical = _lookup(names)
+    if logical is None:
+        return P()
+    return _assign(logical, tuple(shape), mesh, fsdp=fsdp, cfg=cfg)
+
+
+def tree_param_shardings(cfg: ModelConfig, tree, mesh, *, fsdp: bool = True):
+    """NamedSharding pytree matching ``tree`` (works on ShapeDtypeStructs)."""
+
+    def f(path, leaf):
+        return NamedSharding(
+            mesh, param_spec(cfg, path, leaf.shape, mesh, fsdp=fsdp))
+
+    return jax.tree_util.tree_map_with_path(f, tree)
+
+
+# ---------------------------------------------------------------------------
+# batches / caches / activations
+# ---------------------------------------------------------------------------
+
+
+def batch_axes_for(b: int, mesh) -> Optional[object]:
+    """Largest prefix of the dp axes that divides the batch."""
+    dp = dp_axes(mesh)
+    full = 1
+    for a in dp:
+        full *= mesh.shape[a]
+    if full > 1 and b % full == 0:
+        return dp if len(dp) > 1 else dp[0]
+    if "data" in dp and b % mesh.shape["data"] == 0 and mesh.shape["data"] > 1:
+        return "data"
+    if "pod" in dp and b % mesh.shape["pod"] == 0 and mesh.shape["pod"] > 1:
+        return "pod"
+    return None
+
+
+def batch_spec(shape: Tuple[int, ...], mesh) -> P:
+    ax = batch_axes_for(shape[0], mesh)
+    return P(ax, *([None] * (len(shape) - 1)))
+
+
+def tree_batch_shardings(tree, mesh):
+    return jax.tree.map(
+        lambda l: NamedSharding(mesh, batch_spec(l.shape, mesh)), tree)
+
+
+def cache_spec(cfg: ModelConfig, path, shape, mesh) -> P:
+    """KV / state caches: (L|apps, B, S, KV, hd) or recurrent states."""
+    names = _path_names(path)
+    leaf = names[-1]
+    nm = model_size(mesh)
+    if leaf in ("k", "v") or "ckv" in names:
+        l_, b, s, kv, hd = shape
+        bx = batch_axes_for(b, mesh)
+        if nm > 1 and kv % nm == 0:
+            return P(None, bx, None, "model", None)
+        if nm > 1 and s % nm == 0:
+            # MQA long-context: shard the cache sequence (context parallel)
+            return P(None, bx, "model", None, None)
+        return P(None, bx, None, None, None)
+    if leaf in ("wkv", "ssm"):                    # (L,B,H,dk,dv)
+        l_, b, h = shape[:3]
+        bx = batch_axes_for(b, mesh)
+        ax = "model" if nm > 1 and h % nm == 0 else None
+        return P(None, bx, ax, *([None] * (len(shape) - 3)))
+    if leaf in ("shift_t", "shift_c", "conv"):
+        b = shape[1]
+        return P(None, batch_axes_for(b, mesh), *([None] * (len(shape) - 2)))
+    if leaf == "len":
+        return P()
+    # fallback: shard dim-1 (batch) if divisible
+    if len(shape) >= 2:
+        return P(None, batch_axes_for(shape[1], mesh),
+                 *([None] * (len(shape) - 2)))
+    return P()
+
+
+def tree_cache_shardings(cfg: ModelConfig, tree, mesh):
+    def f(path, leaf):
+        return NamedSharding(mesh, cache_spec(cfg, path, leaf.shape, mesh))
+
+    return jax.tree_util.tree_map_with_path(f, tree)
+
+
+def opt_state_shardings(cfg: ModelConfig, state_tree, mesh,
+                        *, fsdp: bool = True):
+    """TrainState shardings: params + AdamW moments (moments shard like
+    params — together with fsdp=True this is ZeRO-2/3-style)."""
+
+    def f(path, leaf):
+        names = _path_names(path)
+        if names and names[-1] == "step":
+            return NamedSharding(mesh, P())
+        # strip the TrainState/AdamWState wrappers (params/mu/nu prefix)
+        for i, n in enumerate(names):
+            if n in ("params", "mu", "nu"):
+                names = names[i + 1:]
+                break
+        spec = param_spec(cfg, _FakePath(names), leaf.shape, mesh, fsdp=fsdp)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(f, state_tree)
+
+
+class _FakePath(tuple):
+    """Adapter: a tuple of names quacking like a key path."""
+
+    def __new__(cls, names):
+        return super().__new__(cls, [_FakeKey(n) for n in names])
+
+
+class _FakeKey:
+    def __init__(self, key):
+        self.key = key

@@ -1,0 +1,114 @@
+"""Training step: loss, microbatched gradient accumulation, clipping,
+AdamW — a single jit-able function suitable for pjit sharding.
+
+Microbatching splits the per-step batch along the batch axis and
+accumulates gradients with a ``lax.scan`` (constant memory in the number of
+microbatches).  Remat inside the model body (per-layer ``jax.checkpoint``)
+plus microbatching is the standard memory lever for the large train cells.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.config import ModelConfig
+from repro.models.registry import get_model
+from repro.optim import adamw
+
+MOE_LB_COEF = 0.01
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt: adamw.AdamWState
+    step: jax.Array
+
+
+def make_train_state(cfg: ModelConfig, key: jax.Array,
+                     lr: float = 3e-4) -> TrainState:
+    api = get_model(cfg)
+    params = api.init_params(cfg, key)
+    return TrainState(params=params, opt=adamw.init(params),
+                      step=jnp.zeros((), jnp.int32))
+
+
+def softmax_xent(logits: jax.Array, targets: jax.Array) -> jax.Array:
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def loss_fn(cfg: ModelConfig, params, batch: Dict[str, jax.Array]):
+    api = get_model(cfg)
+    kw = {}
+    if "prefix_embeds" in batch:
+        kw["prefix_embeds"] = batch["prefix_embeds"]
+    logits, aux = api.forward(cfg, params, batch["tokens"], **kw)
+    loss = softmax_xent(logits, batch["targets"])
+    if "moe/lb_loss" in aux:
+        loss = loss + MOE_LB_COEF * jnp.mean(aux["moe/lb_loss"])
+    return loss, aux
+
+
+def train_step_fn(
+    cfg: ModelConfig,
+    *,
+    microbatches: int = 1,
+    lr_schedule: Optional[Callable] = None,
+    max_grad_norm: float = 1.0,
+    weight_decay: float = 0.1,
+    lr: float = 3e-4,
+) -> Callable[[TrainState, Dict[str, jax.Array]], Tuple[TrainState, dict]]:
+    """Build the (jit-able) train step for ``cfg``."""
+
+    grad_fn = jax.grad(lambda p, b: loss_fn(cfg, p, b)[0])
+
+    def split_micro(batch):
+        def f(x):
+            b = x.shape[0]
+            assert b % microbatches == 0, (b, microbatches)
+            return x.reshape(microbatches, b // microbatches, *x.shape[1:])
+
+        return jax.tree.map(f, batch)
+
+    def step(state: TrainState, batch) -> Tuple[TrainState, dict]:
+        if microbatches == 1:
+            loss, aux = loss_fn(cfg, state.params, batch)
+            grads = grad_fn(state.params, batch)
+        else:
+            micro = split_micro(batch)
+
+            def acc_body(carry, mb):
+                g_acc, l_acc = carry
+                l, _ = loss_fn(cfg, state.params, mb)
+                g = grad_fn(state.params, mb)
+                g_acc = jax.tree.map(jnp.add, g_acc, g)
+                return (g_acc, l_acc + l), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+            (grads, loss), _ = lax.scan(acc_body, (g0, jnp.zeros(())), micro)
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            loss = loss / microbatches
+            aux = {}
+
+        grads, gnorm = adamw.clip_by_global_norm(grads, max_grad_norm)
+        lr_t = lr_schedule(state.step) if lr_schedule is not None else lr
+        new_params, new_opt = adamw.update(
+            grads, state.opt, state.params, lr=lr_t,
+            weight_decay=weight_decay)
+        metrics = {"loss": loss, "grad_norm": gnorm, "lr": jnp.asarray(lr_t)}
+        return (
+            TrainState(params=new_params, opt=new_opt, step=state.step + 1),
+            metrics,
+        )
+
+    return step

@@ -1,0 +1,139 @@
+"""Core analog engine: exactness in the error-free limit for every mapping
+scheme, FPG exactness, unit-column behaviour, and the paper's sensitivity
+orderings at dot-product level."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import analog as A
+from repro.core import errors as E
+from repro.core.adc import ADCConfig
+from repro.core.mapping import MappingConfig
+from repro.core.quant import quantize_acts, quantize_weights
+
+K, N, M = 96, 24, 7
+W = jax.random.normal(jax.random.PRNGKey(0), (K, N)) * 0.05
+X = jax.random.normal(jax.random.PRNGKey(1), (M, K))
+NONE_ADC = ADCConfig(style="none")
+
+
+def _quant_ref(spec):
+    m = spec.mapping
+    mag = None if m.scheme == "offset" else m.magnitude_bits
+    qw = quantize_weights(W, m.weight_bits, magnitude_bits=mag)
+    qx = quantize_acts(X, spec.input_bits, signed=True)
+    return (qx.values @ qw.values) * qw.scale * qx.scale
+
+
+@pytest.mark.parametrize("scheme", ["differential", "offset"])
+@pytest.mark.parametrize("bpc", [None, 1, 2, 4])
+@pytest.mark.parametrize("accum", ["analog", "digital"])
+@pytest.mark.parametrize("onoff", [float("inf"), 100.0])
+def test_error_free_exactness(scheme, bpc, accum, onoff):
+    mc = MappingConfig(scheme=scheme, bits_per_cell=bpc, on_off_ratio=onoff)
+    spec = A.AnalogSpec(mapping=mc, adc=NONE_ADC, input_accum=accum,
+                        max_rows=40)
+    aw = A.program(W, spec)
+    y = A.analog_matmul(X, aw, spec)
+    ref = _quant_ref(spec)
+    rel = float(jnp.max(jnp.abs(y - ref)) / jnp.max(jnp.abs(ref)))
+    assert rel < 1e-5
+
+
+@pytest.mark.parametrize("scheme,accum", [
+    ("differential", "analog"), ("offset", "digital"),
+    ("differential", "digital"), ("offset", "analog"),
+])
+@pytest.mark.parametrize("bpc", [None, 2])
+def test_fpg_is_exact(scheme, accum, bpc):
+    mc = MappingConfig(scheme=scheme, bits_per_cell=bpc)
+    spec = A.AnalogSpec(mapping=mc, adc=ADCConfig(style="fpg"),
+                        input_accum=accum, max_rows=40)
+    aw = A.program(W, spec)
+    y = A.analog_matmul(X, aw, spec)
+    spec0 = A.AnalogSpec(mapping=mc, adc=NONE_ADC, input_accum=accum,
+                         max_rows=40)
+    y0 = A.analog_matmul(X, aw, spec0)
+    rel = float(jnp.max(jnp.abs(y - y0)) / jnp.max(jnp.abs(y0)))
+    assert rel < 1e-5, "FPG must provide a level per possible output"
+
+
+def test_unit_column_exact_without_errors():
+    mc = MappingConfig(scheme="offset", bits_per_cell=2, unit_column=True)
+    spec = A.AnalogSpec(mapping=mc, adc=NONE_ADC, input_accum="digital",
+                        max_rows=40)
+    aw = A.program(W, spec)
+    y = A.analog_matmul(X, aw, spec)
+    ref = _quant_ref(spec)
+    np.testing.assert_allclose(y, ref, rtol=1e-4, atol=1e-5)
+
+
+def test_unit_column_correlates_errors():
+    """Sec 5.2: the unit column increases error vs digital offset."""
+    mc_u = MappingConfig(scheme="offset", bits_per_cell=2, unit_column=True)
+    mc_d = MappingConfig(scheme="offset", bits_per_cell=2)
+    errs = {}
+    for name, mc in (("unit", mc_u), ("digital", mc_d)):
+        spec = A.AnalogSpec(mapping=mc, adc=NONE_ADC, input_accum="digital",
+                            max_rows=1152,
+                            error=E.state_independent(0.02))
+        spec0 = A.AnalogSpec(mapping=mc, adc=NONE_ADC, input_accum="digital",
+                             max_rows=1152)
+        y0 = A.analog_matmul(X, A.program(W, spec0), spec0)
+        es = []
+        for t in range(5):
+            aw = A.program(W, spec, jax.random.PRNGKey(t))
+            y = A.analog_matmul(X, aw, spec)
+            es.append(float(jnp.sqrt(jnp.mean((y - y0) ** 2))))
+        errs[name] = np.mean(es)
+    assert errs["unit"] > errs["digital"]
+
+
+def _dot_err(scheme, err, accum):
+    mc = MappingConfig(scheme=scheme)
+    spec = A.AnalogSpec(mapping=mc, adc=NONE_ADC, error=err,
+                        input_accum=accum, max_rows=1152)
+    spec0 = A.AnalogSpec(mapping=mc, adc=NONE_ADC, input_accum=accum,
+                         max_rows=1152)
+    y0 = A.analog_matmul(X, A.program(W, spec0), spec0)
+    es = []
+    for t in range(4):
+        aw = A.program(W, spec, jax.random.PRNGKey(100 + t))
+        y = A.analog_matmul(X, aw, spec)
+        es.append(float(jnp.sqrt(jnp.mean((y - y0) ** 2)) / jnp.std(y0)))
+    return np.mean(es)
+
+
+def test_paper_orderings():
+    e_off_ind = _dot_err("offset", E.state_independent(0.02), "digital")
+    e_dif_ind = _dot_err("differential", E.state_independent(0.02), "analog")
+    e_off_prp = _dot_err("offset", E.state_proportional(0.04), "digital")
+    e_dif_prp = _dot_err("differential", E.state_proportional(0.04), "analog")
+    assert e_dif_ind < e_off_ind          # Fig. 8: differential beats offset
+    assert e_dif_prp < 0.3 * e_off_prp    # Fig. 9: >>x with proportionality
+    assert e_dif_prp < e_dif_ind          # Sec. 5.3
+    # offset cannot tell the two error types apart (Sec. 5.3):
+    assert 0.5 < e_off_ind / (e_off_prp / 2.0) < 2.0
+
+
+def test_adc_conversion_counts():
+    a = A.design_a()
+    e = A.design_e()
+    assert a.adc_conversions_per_mvm(1152, 256) == 256
+    assert e.adc_conversions_per_mvm(1152, 256) == 256 * 4 * 16 * 7
+    # Table 3 B_out values
+    assert a.fpg_adc_bits(1152) == 27   # 26.2 rounded up
+    assert e.fpg_adc_bits(1152) in (9, 10)  # 8.2 + signed-input bit
+
+
+def test_sonos_error_model_shape():
+    em = E.sonos()
+    g = jnp.linspace(0.0, 1.0, 11)
+    s = em.sigma(g)
+    # proportional at low g with slope ~6%
+    assert abs(float(s[1] / g[1]) - 0.06) < 0.01
+    # saturating near 0.031 at the top
+    assert float(s[-1]) < 0.033
+    assert bool(jnp.all(jnp.diff(s) >= -1e-9))

@@ -1,0 +1,123 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs ref.py oracle.
+
+ADC-bearing kernels are quantizers: a float dot product landing within a
+few ULPs of an ADC decision boundary may legally flip by one LSB between
+two correct implementations (different fp32 accumulation orders).  The
+tolerance policy is therefore: (a) the vast majority of outputs match to
+float precision, and (b) every output matches within the worst-case
+single-boundary-flip impact (one ADC LSB times the largest shift-and-add
+weight times the gain).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.core.parasitics import bitline_currents
+
+
+def quantizer_allclose(y_k, y_r, *, flip_atol, tight_rtol=1e-4, frac=0.98):
+    y_k, y_r = np.asarray(y_k), np.asarray(y_r)
+    np.testing.assert_allclose(y_k, y_r, atol=flip_atol, rtol=0)
+    tight = np.isclose(y_k, y_r, rtol=tight_rtol, atol=flip_atol * 1e-3)
+    assert tight.mean() >= frac, f"only {tight.mean():.2%} bit-exact"
+
+
+MVM_SHAPES = [
+    (8, 1, 64, 16),
+    (32, 2, 96, 40),
+    (128, 1, 1152, 256),
+    (64, 3, 200, 24),
+    (16, 2, 8, 8),
+]
+
+
+@pytest.mark.parametrize("m,p,rows,n", MVM_SHAPES)
+@pytest.mark.parametrize("adc_bits", [6, 8])
+def test_analog_mvm_diff_matches_ref(m, p, rows, n, adc_bits):
+    ks = jax.random.split(jax.random.PRNGKey(m * 7 + p), 3)
+    x = jnp.round(jax.random.normal(ks[0], (m, p, rows)) * 40).astype(jnp.float32)
+    gp = jax.random.uniform(ks[1], (p, rows, n)) * 0.1
+    gm = jax.random.uniform(ks[2], (p, rows, n)) * 0.1
+    lo, hi = jnp.float32(-50.0), jnp.float32(50.0)
+    gain = 127.0
+    args = dict(adc_lo=lo, adc_hi=hi, adc_bits=adc_bits, gain=gain)
+    y_k = ops.analog_mvm(x, gp, gm, **args)
+    y_r = ref.analog_mvm_diff(x, gp, gm, **args)
+    lsb = 100.0 / (2 ** adc_bits - 1)
+    quantizer_allclose(y_k, y_r, flip_atol=lsb * gain * p)
+
+
+@pytest.mark.parametrize("m,p,rows,n", MVM_SHAPES[:4])
+@pytest.mark.parametrize("n_bits", [4, 7])
+def test_analog_mvm_bitserial_matches_ref(m, p, rows, n, n_bits):
+    ks = jax.random.split(jax.random.PRNGKey(m + p + n_bits), 3)
+    qmax = 2 ** n_bits - 1
+    x = jnp.round(jax.random.normal(ks[0], (m, p, rows)) * qmax / 3)
+    x = jnp.clip(x, -qmax, qmax).astype(jnp.float32)
+    gp = jax.random.uniform(ks[1], (p, rows, n)) * 0.1
+    gm = jax.random.uniform(ks[2], (p, rows, n)) * 0.1
+    lo, hi = jnp.float32(-20.0), jnp.float32(20.0)
+    gain = 127.0
+    args = dict(n_bits=n_bits, adc_lo=lo, adc_hi=hi, adc_bits=8, gain=gain)
+    y_k = ops.analog_mvm_bitserial(x, gp, gm, **args)
+    y_r = ref.analog_mvm_bitserial(x, gp, gm, **args)
+    lsb = 40.0 / 255.0
+    # worst case: one flip at every bit of one partition chain
+    quantizer_allclose(y_k, y_r, flip_atol=lsb * gain * p * 2 ** n_bits)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_analog_mvm_dtypes(dtype):
+    m, p, rows, n = 16, 1, 64, 24
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    x = jnp.round(jax.random.normal(ks[0], (m, p, rows)) * 30).astype(dtype)
+    gp = (jax.random.uniform(ks[1], (p, rows, n)) * 0.1).astype(dtype)
+    gm = (jax.random.uniform(ks[2], (p, rows, n)) * 0.1).astype(dtype)
+    lo, hi = jnp.float32(-30.0), jnp.float32(30.0)
+    y = ops.analog_mvm(x, gp, gm, adc_lo=lo, adc_hi=hi, adc_bits=8, gain=1.0)
+    assert y.shape == (m, n)
+    assert bool(jnp.all(jnp.isfinite(y)))
+
+
+@pytest.mark.parametrize("m,k,n,r", [
+    (8, 17, 16, 1e-3),
+    (32, 96, 24, 1e-4),
+    (16, 200, 8, 1e-5),
+    (128, 64, 128, 3e-4),
+])
+def test_bitline_kernel_matches_solver(m, k, n, r):
+    kx, kg = jax.random.split(jax.random.PRNGKey(k), 2)
+    x = jnp.sign(jax.random.normal(kx, (m, k))) * (
+        jax.random.uniform(jax.random.PRNGKey(2), (m, k)) > 0.4
+    )
+    g = jax.random.uniform(kg, (k, n))
+    y_k = ops.bitline_mvm(g, x, r)
+    y_r = bitline_currents(g, x.astype(jnp.float32), r)
+    np.testing.assert_allclose(y_k, y_r, rtol=1e-4, atol=1e-5)
+
+
+def test_bitline_kernel_zero_r_is_ideal():
+    kx, kg = jax.random.split(jax.random.PRNGKey(5), 2)
+    x = jnp.sign(jax.random.normal(kx, (8, 32)))
+    g = jax.random.uniform(kg, (32, 16))
+    np.testing.assert_allclose(ops.bitline_mvm(g, x, 0.0), x @ g, rtol=1e-6)
+
+
+def test_bitline_vs_dense_oracle():
+    """Thomas-in-kernel vs dense jnp.linalg.solve, element by element."""
+    from repro.core.parasitics import bitline_voltages_dense
+
+    m, k, n, r = 4, 23, 6, 2e-3
+    kx, kg = jax.random.split(jax.random.PRNGKey(7), 2)
+    x = jnp.sign(jax.random.normal(kx, (m, k))) * (
+        jax.random.uniform(jax.random.PRNGKey(8), (m, k)) > 0.3
+    )
+    g = jax.random.uniform(kg, (k, n))
+    y_k = ops.bitline_mvm(g, x, r)
+    for mm in range(m):
+        for nn in range(n):
+            v = bitline_voltages_dense(g[:, nn], x[mm], r)
+            np.testing.assert_allclose(y_k[mm, nn], v[-1] / r, rtol=1e-4)

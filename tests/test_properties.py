@@ -1,0 +1,183 @@
+"""Hypothesis property tests on the system's invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import adc as adc_lib
+from repro.core.mapping import (
+    MappingConfig,
+    codes_to_conductance,
+    conductance_to_codes,
+    program_weights,
+    reconstruct_weights,
+    slice_codes,
+    unslice_codes,
+)
+from repro.core.quant import bit_planes, quantize_weights
+
+SETTINGS = dict(max_examples=30, deadline=None)
+
+
+@given(
+    codes=st.lists(st.integers(0, 255), min_size=1, max_size=32),
+    bpc=st.sampled_from([1, 2, 4]),
+)
+@settings(**SETTINGS)
+def test_slice_unslice_roundtrip(codes, bpc):
+    c = jnp.asarray(codes, jnp.int32)
+    n_slices = -(-8 // bpc)
+    s = slice_codes(c, bpc, n_slices)
+    assert bool(jnp.all(s >= 0)) and bool(jnp.all(s < 2 ** bpc))
+    np.testing.assert_array_equal(np.asarray(unslice_codes(s, bpc)), codes)
+
+
+@given(
+    vals=st.lists(st.integers(-127, 127), min_size=2, max_size=64),
+    scheme=st.sampled_from(["offset", "differential"]),
+    bpc=st.sampled_from([None, 1, 2, 4]),
+    onoff=st.sampled_from([float("inf"), 100.0, 10.0]),
+)
+@settings(**SETTINGS)
+def test_program_reconstruct_roundtrip(vals, scheme, bpc, onoff):
+    w = jnp.asarray(vals, jnp.int32).reshape(-1, 1)
+    mc = MappingConfig(scheme=scheme, bits_per_cell=bpc, on_off_ratio=onoff)
+    pw = program_weights(w, mc)
+    back = reconstruct_weights(pw, mc)
+    np.testing.assert_allclose(np.asarray(back), np.asarray(w), atol=1e-3)
+    # conductances physical: in [g_min - eps, 1]
+    for g in (pw.g_pos, pw.g_neg):
+        if g is not None:
+            assert bool(jnp.all(g >= mc.g_min - 1e-6))
+            assert bool(jnp.all(g <= 1.0 + 1e-6))
+
+
+@given(
+    x=st.lists(st.integers(-127, 127), min_size=1, max_size=32),
+)
+@settings(**SETTINGS)
+def test_bit_planes_reconstruct(x):
+    xi = jnp.asarray(x, jnp.float32)
+    planes = bit_planes(xi, 7, signed=True)
+    recon = sum(2.0 ** b * planes[b] for b in range(7))
+    np.testing.assert_array_equal(np.asarray(recon), np.asarray(xi))
+    assert bool(jnp.all(jnp.abs(planes) <= 1))
+
+
+@given(
+    data=st.lists(st.floats(-100, 100, allow_nan=False), min_size=8,
+                  max_size=64),
+    bits=st.sampled_from([4, 6, 8]),
+    lo=st.floats(-50, -1),
+    hi=st.floats(1, 50),
+)
+@settings(**SETTINGS)
+def test_adc_monotone_and_bounded(data, bits, lo, hi):
+    v = jnp.asarray(sorted(data), jnp.float32)
+    q = adc_lib.adc_quantize(v, lo, hi, bits)
+    dq = np.diff(np.asarray(q))
+    assert (dq >= -1e-5).all(), "quantizer must be monotone"
+    assert float(jnp.min(q)) >= lo - 1e-5
+    assert float(jnp.max(q)) <= hi + 1e-5
+    lsb = (hi - lo) / (2 ** bits - 1)
+    inside = (v >= lo) & (v <= hi)
+    err = jnp.abs(q - v) * inside
+    assert float(jnp.max(err)) <= lsb / 2 + 1e-5
+
+
+@given(
+    needs=st.lists(st.floats(0.01, 100.0), min_size=2, max_size=8),
+)
+@settings(**SETTINGS)
+def test_power_of_two_ranges(needs):
+    n = jnp.asarray(needs, jnp.float32)
+    granted = adc_lib.power_of_two_ranges(n)
+    assert bool(jnp.all(granted >= n - 1e-5)), "granted must cover need"
+    ratios = granted / jnp.min(granted)
+    logr = np.log2(np.asarray(ratios))
+    assert np.allclose(logr, np.round(logr), atol=1e-4)
+
+
+@given(
+    w=st.lists(st.floats(-1, 1, allow_nan=False, width=32), min_size=4,
+               max_size=64),
+    bits=st.sampled_from([4, 8]),
+)
+@settings(**SETTINGS)
+def test_weight_quant_error_bound(w, bits):
+    arr = jnp.asarray(w, jnp.float32).reshape(-1, 1)
+    q = quantize_weights(arr, bits)
+    err = jnp.max(jnp.abs(q.dequant() - arr))
+    bound = jnp.max(jnp.abs(arr)) / (2 ** (bits - 1) - 1) / 2 + 1e-7
+    assert float(err) <= float(bound) * 1.01
+
+
+@given(
+    k=st.integers(2, 24),
+    r=st.floats(1e-6, 1e-2),
+    seed=st.integers(0, 100),
+)
+@settings(**SETTINGS)
+def test_parasitic_solver_vs_dense(k, r, seed):
+    from repro.core.parasitics import (
+        bitline_currents, bitline_voltages_dense, injected_current)
+
+    kg, kx = jax.random.split(jax.random.PRNGKey(seed))
+    g = jax.random.uniform(kg, (k, 3))
+    x = jnp.sign(jax.random.normal(kx, (2, k)))
+    out = bitline_currents(g, x, r)
+    for m in range(2):
+        for n in range(3):
+            v = bitline_voltages_dense(g[:, n], x[m], r)
+            np.testing.assert_allclose(out[m, n], v[-1] / r, rtol=1e-3,
+                                       atol=1e-5)
+            # Kirchhoff: bottom-segment current == injected current
+            np.testing.assert_allclose(
+                v[-1] / r, injected_current(g[:, n], x[m], v),
+                rtol=1e-3, atol=1e-5)
+
+
+@given(seed=st.integers(0, 50))
+@settings(max_examples=10, deadline=None)
+def test_parasitics_only_reduce_current_magnitude(seed):
+    """Voltage sag can only pull outputs toward zero (Sec. 8: 'downward')."""
+    from repro.core.parasitics import bitline_currents
+
+    kg, kx = jax.random.split(jax.random.PRNGKey(seed))
+    g = jax.random.uniform(kg, (16, 4))
+    x = (jax.random.uniform(kx, (3, 16)) > 0.5).astype(jnp.float32)  # unipolar
+    ideal = x @ g
+    sag = bitline_currents(g, x, 1e-3)
+    assert bool(jnp.all(sag <= ideal + 1e-6))
+    assert bool(jnp.all(sag >= 0))
+
+
+def test_energy_model_monotonicity():
+    from repro.core import energy as en
+    from repro.core.adc import ADCConfig
+    from repro.core.analog import AnalogSpec
+    from repro.core.mapping import MappingConfig
+
+    base = AnalogSpec(mapping=MappingConfig(scheme="differential"),
+                      adc=ADCConfig(bits=8), input_accum="analog",
+                      max_rows=1152)
+    e_base = en.core_energy(base, g_avg=0.02)
+    # more slices cost more
+    sliced = AnalogSpec(mapping=MappingConfig(scheme="differential",
+                                              bits_per_cell=1),
+                        adc=ADCConfig(bits=8), input_accum="analog",
+                        max_rows=1152)
+    assert en.core_energy(sliced, g_avg=0.02) > e_base
+    # smaller arrays cost more (less ADC amortization)
+    small = AnalogSpec(mapping=MappingConfig(scheme="differential"),
+                       adc=ADCConfig(bits=8), input_accum="analog",
+                       max_rows=144)
+    assert en.core_energy(small, g_avg=0.02) > e_base
+    # digital input accumulation costs more
+    dig = AnalogSpec(mapping=MappingConfig(scheme="differential"),
+                     adc=ADCConfig(bits=8), input_accum="digital",
+                     max_rows=1152)
+    assert en.core_energy(dig, g_avg=0.02) > e_base
+    # higher conductance costs more
+    assert en.core_energy(base, g_avg=0.5) > e_base

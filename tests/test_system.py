@@ -1,0 +1,94 @@
+"""End-to-end behaviour tests: train a tiny LM until loss drops, checkpoint
+/restore mid-run, then program it onto the analog substrate, calibrate, and
+verify the analog model's quality tracks the digital one (the paper's
+direct-weight-transfer story on an LM)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import analog as A
+from repro.core import errors as E
+from repro.data.synthetic import SyntheticLM
+from repro.serve.analog_engine import analog_eval_loss, calibrate_lm, program_lm
+from repro.train.step import loss_fn, make_train_state, train_step_fn
+
+
+@pytest.fixture(scope="module")
+def trained_lm():
+    cfg = get_smoke_config("qwen1.5-4b")
+    ds = SyntheticLM(cfg=cfg, seq_len=32, global_batch=8, seed=0)
+    state = make_train_state(cfg, jax.random.PRNGKey(0), lr=3e-3)
+    step = jax.jit(train_step_fn(cfg, microbatches=1, lr=3e-3))
+    first = None
+    for i in range(60):
+        state, m = step(state, ds.batch(i))
+        if first is None:
+            first = float(m["loss"])
+    return cfg, ds, state, first, float(m["loss"])
+
+
+def test_training_reduces_loss(trained_lm):
+    cfg, ds, state, first, last = trained_lm
+    assert np.isfinite(last)
+    assert last < first - 0.5, (first, last)
+
+
+def test_checkpoint_restart_reproduces_trajectory(trained_lm, tmp_path):
+    from repro.checkpoint.manager import CheckpointManager
+
+    cfg, ds, state, *_ = trained_lm
+    step = jax.jit(train_step_fn(cfg, microbatches=1, lr=3e-3))
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(60, state)
+    # continue 3 steps from live state
+    s_live = state
+    for i in range(60, 63):
+        s_live, m_live = step(s_live, ds.batch(i))
+    # restart from checkpoint + deterministic data replay
+    s_rest, at_step, _ = mgr.restore(state)
+    for i in range(at_step, 63):
+        s_rest, m_rest = step(s_rest, ds.batch(i))
+    assert abs(float(m_live["loss"]) - float(m_rest["loss"])) < 1e-5
+
+
+def test_analog_direct_weight_transfer_tracks_digital(trained_lm):
+    cfg, ds, state, *_ = trained_lm
+    batch = ds.batch(999)
+    dig = float(loss_fn(cfg, state.params, batch)[0])
+
+    spec = A.design_a(error=E.sonos())
+    pack = program_lm(cfg, state.params, spec, jax.random.PRNGKey(5))
+    pack = calibrate_lm(cfg, state.params, pack, ds.batch(998)["tokens"])
+    al = float(analog_eval_loss(cfg, state.params, pack,
+                                batch["tokens"], batch["targets"]))
+    assert np.isfinite(al)
+    # direct weight transfer with the recommended design: small penalty
+    assert al < dig * 1.35 + 0.2, (dig, al)
+
+
+def test_analog_offset_design_is_worse(trained_lm):
+    """Paper Table 4: the offset/near-FPG design E loses far more."""
+    from repro.core.adc import ADCConfig
+    from repro.core.mapping import MappingConfig
+
+    cfg, ds, state, *_ = trained_lm
+    batch = ds.batch(999)
+
+    spec_a = A.design_a(error=E.state_independent(0.04))
+    spec_e = A.AnalogSpec(
+        mapping=MappingConfig(scheme="offset", bits_per_cell=2),
+        adc=ADCConfig(style="calibrated", bits=8),
+        error=E.state_independent(0.04), input_accum="digital", max_rows=72)
+
+    def ppl(spec):
+        pack = program_lm(cfg, state.params, spec, jax.random.PRNGKey(5))
+        pack = calibrate_lm(cfg, state.params, pack, ds.batch(998)["tokens"])
+        return float(analog_eval_loss(cfg, state.params, pack,
+                                      batch["tokens"], batch["targets"]))
+
+    la, le = ppl(spec_a), ppl(spec_e)
+    dig = float(loss_fn(cfg, state.params, batch)[0])
+    assert la - dig < le - dig, (la, le, dig)
