@@ -1,4 +1,4 @@
-"""Shared benchmark vehicle: a small trained classifier + analog evaluation.
+"""Shared benchmark vehicle: a small trained classifier + sweep wiring.
 
 The paper's accuracy claims are about *trained* networks (zero-peaked
 weight distributions are the mechanism behind proportional mapping), so
@@ -6,10 +6,15 @@ every sensitivity benchmark runs on an MLP classifier trained here on a
 deterministic synthetic 16-class task (CPU, seconds).  The trained weights
 are cached under ``benchmarks/_cache``.
 
-``analog_accuracy`` evaluates that classifier with every weight matrix
-executed through ``repro.core.analog`` — program -> calibrate ADC ranges
-on a calibration split -> test-set accuracy, averaged over programming
-trials (the paper's 10-trial protocol, default 5 here for CPU time).
+Each benchmark script declares its design grid as a
+:class:`repro.sweep.SweepSpec` and evaluates it with
+:func:`run_bench_sweep`, which wires in the shared
+:class:`~repro.sweep.ClassifierEvaluator` (the trained MLP + calibration/
+test splits), the on-disk sweep cache (``benchmarks/_cache/sweeps``), and
+the device mesh when more than one device is visible.  The legacy
+one-point-at-a-time loop survives only as :func:`analog_accuracy`, the
+serial reference that ``kernelbench`` times the vectorized engine against
+and ``tests/test_sweep.py`` pins it to.
 """
 
 from __future__ import annotations
@@ -23,13 +28,28 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import adc as adc_lib
-from repro.core.analog import AnalogSpec, analog_matmul, program
+from repro.core.analog import AnalogSpec
 from repro.core.quant import calibrate_act_range
+from repro.sweep import (
+    ClassifierEvaluator,
+    SweepResults,
+    SweepSpec,
+    run_sweep,
+    serial_accuracy,
+    sweep_mesh,
+)
 
 CACHE = os.path.join(os.path.dirname(__file__), "_cache")
 N_CLASSES = 64
 DIMS = (64, 256, 256, 256, N_CLASSES)
+
+#: set by ``benchmarks.run --smoke``: one trial per point, for CI.
+SMOKE = False
+
+
+def trials_for(n: int) -> int:
+    """The paper's trial count, reduced to 1 under ``--smoke``."""
+    return 1 if SMOKE else n
 
 
 def make_dataset(key, n: int):
@@ -124,6 +144,40 @@ def _layer_inputs(params, x, layer: int):
     return h
 
 
+# ---------------------------------------------------------------------------
+# sweep wiring
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=1)
+def mlp_evaluator() -> ClassifierEvaluator:
+    """The shared vectorized evaluator: trained MLP + eval splits."""
+    params = train_mlp()
+    xca, _, xte, yte = eval_data()
+    return ClassifierEvaluator(params, xca, xte, yte)
+
+
+def run_bench_sweep(sweep: SweepSpec, evaluator=None, *,
+                    cache: bool = True, force: bool = False) -> SweepResults:
+    """Run a benchmark sweep: shared evaluator, on-disk cache, device mesh."""
+    ev = evaluator if evaluator is not None else mlp_evaluator()
+    return run_sweep(
+        sweep,
+        ev,
+        cache_dir=CACHE if (cache and not SMOKE) else None,
+        force=force,
+        mesh=sweep_mesh(),
+        verbose=True,
+    )
+
+
+def emit_sweep(prefix: str, results: SweepResults, *, fmt=None) -> None:
+    """One CSV row per design point; wall-clock is per programming trial."""
+    trials = max(results.sweep.trials, 1)
+    for r in results:
+        derived = fmt(r) if fmt else f"acc={r.mean:.4f}+-{r.std:.4f}"
+        emit(f"{prefix}_{r.tag}", r.wall_s * 1e6 / trials, derived)
+
+
 def analog_accuracy(
     params,
     spec: AnalogSpec,
@@ -132,40 +186,20 @@ def analog_accuracy(
     seed: int = 1234,
     test_n: Optional[int] = None,
 ) -> Tuple[float, float]:
-    """(mean, std) test accuracy of the analog classifier over programming
-    trials.  ``test_n`` subsamples the test set (paper Sec. 4.3's 1000-image
-    subset trick) for expensive configurations (parasitics)."""
+    """(mean, std) accuracy via the LEGACY serial per-point loop.
+
+    One eager programming trial at a time — the pre-sweep-engine path,
+    kept as the reference implementation (see
+    :func:`repro.sweep.serial_accuracy`).  Benchmarks route through
+    :func:`run_bench_sweep` instead; ``kernelbench`` times this loop
+    against the vectorized engine.
+    """
     xca, _, xte, yte = eval_data()
     if test_n is not None:
         xte, yte = xte[:test_n], yte[:test_n]
-
-    def run(trial_key):
-        h_te, h_ca = xte, xca
-        for i, (w, b) in enumerate(params):
-            aw = program(w, spec, jax.random.fold_in(trial_key, i))
-            _, act_hi = calibrate_act_range(h_ca, spec.input_bits)
-            need_cal = spec.adc.style == "calibrated"
-            if need_cal:
-                _, stats = analog_matmul(h_ca, aw, spec, act_hi=act_hi,
-                                         collect=True)
-                lo, hi = stats[:, 0], stats[:, 1]
-                if spec.mapping.sliced:
-                    from repro.core.calibrate import constrain_power_of_two
-                    lo, hi = constrain_power_of_two(lo, hi)
-                kw = dict(adc_lo=lo, adc_hi=hi)
-            else:
-                kw = {}
-            y_te = analog_matmul(h_te, aw, spec, act_hi=act_hi, **kw) + b
-            y_ca = analog_matmul(h_ca, aw, spec, act_hi=act_hi, **kw) + b
-            if i < len(params) - 1:
-                h_te, h_ca = jax.nn.relu(y_te), jax.nn.relu(y_ca)
-            else:
-                h_te = y_te
-        return jnp.mean(jnp.argmax(h_te, -1) == yte)
-
-    accs = [float(run(jax.random.fold_in(jax.random.PRNGKey(seed), t)))
-            for t in range(trials)]
-    return float(np.mean(accs)), float(np.std(accs))
+    mean, std, _ = serial_accuracy(
+        params, spec, xca, xte, yte, trials=trials, seed=seed)
+    return mean, std
 
 
 class Timer:

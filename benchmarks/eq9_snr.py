@@ -3,45 +3,75 @@
 Monte-Carlo of the dot-product SNR for offset mapping with
 state-independent errors: slicing 8-bit weights into 1-bit cells should
 improve SNR by at most sqrt(3) ~ 1.286x for 2-bit cells (Eq. 10) — a
-small benefit, nowhere near the 'slicing fixes bad cells' assumption."""
+small benefit, nowhere near the 'slicing fixes bad cells' assumption.
+
+The Monte-Carlo is a bits-per-cell sweep with a key-taking
+FunctionEvaluator: the six programming trials per point run as one
+vmapped, jitted evaluation instead of a Python loop."""
+
+import dataclasses
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.adc import ADCConfig
-from repro.core.analog import AnalogSpec, analog_matmul, ideal_matmul_int, program
-from repro.core.errors import state_independent
+from repro.core.analog import AnalogSpec, analog_matmul, program
+from repro.core.errors import ErrorModel, state_independent
 from repro.core.mapping import MappingConfig
+from repro.sweep import Axis, FunctionEvaluator, SweepSpec
 
-from benchmarks.common import Timer, emit
+from benchmarks.common import Timer, emit, run_bench_sweep
+
+K, N, M, ALPHA = 512, 64, 64, 0.03
+BPCS = (None, 4, 2, 1)
 
 
-def snr_for(bpc, key, *, k=512, n=64, m=64, alpha=0.03):
-    spec = AnalogSpec(
-        mapping=MappingConfig(scheme="offset", bits_per_cell=bpc),
-        adc=ADCConfig(style="none"), error=state_independent(alpha),
-        input_accum="digital", max_rows=2048)
+def _problem():
     kw, kx = jax.random.split(jax.random.PRNGKey(0), 2)
-    w = jax.random.normal(kw, (k, n)) * 0.05
-    x = jax.nn.relu(jax.random.normal(kx, (m, k)))
-    spec0 = AnalogSpec(mapping=spec.mapping, adc=ADCConfig(style="none"),
-                       input_accum="digital", max_rows=2048)
-    y0 = analog_matmul(x, program(w, spec0), spec0)
-    errs = []
-    for t in range(6):
-        aw = program(w, spec, jax.random.fold_in(key, t))
-        y = analog_matmul(x, aw, spec)
-        errs.append(jnp.sqrt(jnp.mean((y - y0) ** 2)))
-    sig = jnp.std(y0)
-    return float(sig / jnp.mean(jnp.asarray(errs)))
+    w = jax.random.normal(kw, (K, N)) * 0.05
+    x = jax.nn.relu(jax.random.normal(kx, (M, K)))
+    return w, x
 
 
 def main(timer: Timer):
-    key = jax.random.PRNGKey(99)
+    w, x = _problem()
+
+    def trial_rmse(spec: AnalogSpec, key: jax.Array):
+        """RMS dot-product error of one programming trial vs error-free."""
+        spec0 = dataclasses.replace(spec, error=ErrorModel())
+        y0 = analog_matmul(x, program(w, spec0), spec0)
+        y = analog_matmul(x, program(w, spec, key), spec)
+        return jnp.sqrt(jnp.mean((y - y0) ** 2))
+
+    sweep = SweepSpec(
+        name="eq9",
+        base=AnalogSpec(
+            mapping=MappingConfig(scheme="offset"),
+            adc=ADCConfig(style="none"),
+            error=state_independent(ALPHA),
+            input_accum="digital",
+            max_rows=2048,
+        ),
+        axes=(Axis("mapping.bits_per_cell", BPCS,
+                   labels=tuple(f"bpc{b}" for b in BPCS)),),
+        trials=6,
+        seed=99,
+    )
+    res = run_bench_sweep(
+        sweep,
+        FunctionEvaluator(trial_rmse, name="eq9_trial_rmse", takes_key=True,
+                          data=(w, x)))
+
     snrs = {}
-    for bpc in (None, 4, 2, 1):
-        snrs[bpc] = snr_for(bpc, key)
-        emit(f"eq9_snr_bpc{bpc}", 0.0, f"snr={snrs[bpc]:.3f}")
+    for bpc in BPCS:
+        spec0 = AnalogSpec(
+            mapping=MappingConfig(scheme="offset", bits_per_cell=bpc),
+            adc=ADCConfig(style="none"), input_accum="digital", max_rows=2048)
+        sig = float(jnp.std(analog_matmul(x, program(w, spec0), spec0)))
+        r = res[f"bpc{bpc}"]
+        snrs[bpc] = sig / r.mean
+        emit(f"eq9_snr_bpc{bpc}", r.wall_s * 1e6 / sweep.trials,
+             f"snr={snrs[bpc]:.3f}")
     gain2 = snrs[2] / snrs[None]
     gain1 = snrs[1] / snrs[None]
     emit("eq9_claim_sqrt3_bound", 0.0,

@@ -1,33 +1,44 @@
 """Fig. 10: On/Off ratio sensitivity under state-proportional errors with
 differential cells.  Claim: On/Off >= 100 is nearly indistinguishable from
-an infinite On/Off ratio."""
+an infinite On/Off ratio.
 
-import time
+The whole figure is ONE compile group: every point shares the
+differential/unsliced shape and differs only in ``on_off_ratio``, which
+the sweep engine batches as a traced scalar — four design points x five
+trials in a single jitted evaluation."""
 
 from repro.core.adc import ADCConfig
 from repro.core.analog import AnalogSpec
 from repro.core.errors import state_proportional
 from repro.core.mapping import MappingConfig
 
-from benchmarks.common import Timer, analog_accuracy, emit, train_mlp
+from repro.sweep import Axis, SweepSpec
+
+from benchmarks.common import (
+    Timer, emit, emit_sweep, run_bench_sweep, trials_for)
+
+ONOFFS = (10.0, 100.0, 1000.0, float("inf"))
 
 
 def main(timer: Timer):
-    params = train_mlp()
-    accs = {}
-    for onoff in (10.0, 100.0, 1000.0, float("inf")):
-        spec = AnalogSpec(
-            mapping=MappingConfig(scheme="differential", on_off_ratio=onoff),
+    sweep = SweepSpec(
+        name="fig10",
+        base=AnalogSpec(
+            mapping=MappingConfig(scheme="differential"),
             adc=ADCConfig(style="none"),
             error=state_proportional(0.06),
             input_accum="analog",
             max_rows=1152,
-        )
-        t0 = time.perf_counter()
-        m, s = analog_accuracy(params, spec, trials=5)
-        accs[onoff] = m
-        emit(f"fig10_onoff{onoff}", (time.perf_counter() - t0) * 1e6 / 5,
-             f"acc={m:.4f}+-{s:.4f}")
+        ),
+        axes=(
+            Axis("mapping.on_off_ratio", ONOFFS,
+                 labels=tuple(f"onoff{o}" for o in ONOFFS)),
+        ),
+        trials=trials_for(5),
+    )
+    res = run_bench_sweep(sweep)
+    emit_sweep("fig10", res)
+    accs = {o: res.mean(f"onoff{o}") for o in ONOFFS}
     emit("fig10_claim_onoff100_near_inf", 0.0,
          f"onoff100={accs[100.0]:.4f} vs inf={accs[float('inf')]:.4f} "
          f"gap={abs(accs[100.0]-accs[float('inf')]):.4f} (claim: ~0); "

@@ -11,23 +11,27 @@ Claims validated:
     Fallacy, Sec. 3.3);
   * offset subtraction needs small arrays + fine slicing to live with an
     8-bit ADC (Fig. 16).
-"""
 
-import dataclasses
-import time
+Two SweepSpecs: Fig. 15 sweeps ADC resolution per scheme, Fig. 16 fixes
+the 8-bit calibrated ADC and sweeps array depth x bits/cell.  The ADC is
+deterministic, so both run single-trial; distinct (scheme, slicing,
+array-depth) combinations compile once each and their points batch
+within the group."""
 
 from repro.core.adc import ADCConfig
 from repro.core.analog import AnalogSpec
-from repro.core.errors import ErrorModel
 from repro.core.mapping import MappingConfig
 
-from benchmarks.common import Timer, analog_accuracy, digital_accuracy, emit, train_mlp
+from repro.sweep import Axis, SweepSpec
 
+from benchmarks.common import (
+    Timer, digital_accuracy, emit, emit_sweep, run_bench_sweep, train_mlp)
 
-def _acc(params, spec):
-    t0 = time.perf_counter()
-    m, s = analog_accuracy(params, spec, trials=1)   # ADC is deterministic
-    return m, s, (time.perf_counter() - t0) * 1e6
+SCHEME_AXIS = Axis(
+    ("mapping.scheme", "input_accum"),
+    (("differential", "analog"), ("offset", "digital")),
+    labels=("differential", "offset"),
+)
 
 
 def main(timer: Timer):
@@ -35,43 +39,51 @@ def main(timer: Timer):
     base = digital_accuracy(params)
     emit("fig15_digital_baseline", 0.0, f"acc={base:.4f}")
 
-    # --- Fig. 15: ADC bits sweep, calibrated vs FPG-range(uncalibrated) ---
-    for scheme, accum in (("differential", "analog"), ("offset", "digital")):
-        mc = MappingConfig(scheme=scheme, bits_per_cell=None)
-        for bits in (5, 6, 7, 8, 10):
-            spec_c = AnalogSpec(
-                mapping=mc, adc=ADCConfig(style="calibrated", bits=bits),
-                error=ErrorModel(), input_accum=accum, max_rows=1152)
-            m, s, us = _acc(params, spec_c)
-            emit(f"fig15_{scheme}_calib_{bits}b", us, f"acc={m:.4f}")
-        # uncalibrated: FPG-style full range at the SAME (low) resolution
-        for bits in (8, 12, 16):
-            spec_u = dataclasses.replace(
-                spec_c, adc=ADCConfig(style="fpg", bits=bits))
-            # fpg style derives its own bits; emulate "uncalibrated at N
-            # bits" by range=full but resolution=bits via calibrated ranges
-            # set to the full analytic range:
-            from repro.core import adc as adc_lib
+    # --- Fig. 15: ADC bits sweep (calibrated ranges) ----------------------
+    fig15 = SweepSpec(
+        name="fig15",
+        base=AnalogSpec(
+            mapping=MappingConfig(bits_per_cell=None),
+            adc=ADCConfig(style="calibrated"),
+            max_rows=1152,
+        ),
+        axes=(
+            SCHEME_AXIS,
+            Axis("adc.bits", (5, 6, 7, 8, 10),
+                 labels=tuple(f"calib_{b}b" for b in (5, 6, 7, 8, 10))),
+        ),
+        trials=1,   # ADC is deterministic
+    )
+    emit_sweep("fig15", run_bench_sweep(fig15),
+               fmt=lambda r: f"acc={r.mean:.4f}")
 
-            m, s, us = _acc(params, dataclasses.replace(
-                spec_c, adc=ADCConfig(style="calibrated", bits=bits)))
-            del m, s  # calibrated reference at this resolution
-            spec_full = AnalogSpec(
-                mapping=mc, adc=ADCConfig(style="fpg", bits=bits),
-                error=ErrorModel(), input_accum=accum, max_rows=1152)
-            bfpg = spec_full.fpg_adc_bits(256)
-            emit(f"fig15_{scheme}_fpg_bits", 0.0,
-                 f"B_out={bfpg} (vs 8b calibrated sufficing)")
-            break
+    # uncalibrated reference: Eq. (4)'s Full Precision Guarantee resolution
+    # at this depth — the analytic B_out an uncalibrated full-range ADC
+    # would need, vs the 8 calibrated bits sufficing above.
+    for scheme, accum in (("differential", "analog"), ("offset", "digital")):
+        spec_full = AnalogSpec(
+            mapping=MappingConfig(scheme=scheme, bits_per_cell=None),
+            adc=ADCConfig(style="fpg", bits=8),
+            input_accum=accum, max_rows=1152)
+        emit(f"fig15_{scheme}_fpg_bits", 0.0,
+             f"B_out={spec_full.fpg_adc_bits(256)} "
+             f"(vs 8b calibrated sufficing)")
 
     # --- Fig. 16: fixed 8-bit calibrated ADC, sweep rows x bits/cell ------
-    for scheme, accum in (("differential", "analog"), ("offset", "digital")):
-        for bpc in (2, None):
-            for rows in (72, 144, 1152):
-                spec = AnalogSpec(
-                    mapping=MappingConfig(scheme=scheme, bits_per_cell=bpc),
-                    adc=ADCConfig(style="calibrated", bits=8),
-                    error=ErrorModel(), input_accum=accum, max_rows=rows)
-                m, s, us = _acc(params, spec)
-                emit(f"fig16_{scheme}_bpc{bpc}_rows{rows}", us,
-                     f"acc={m:.4f} (drop={base - m:+.4f})")
+    fig16 = SweepSpec(
+        name="fig16",
+        base=AnalogSpec(
+            adc=ADCConfig(style="calibrated", bits=8),
+        ),
+        axes=(
+            SCHEME_AXIS,
+            Axis("mapping.bits_per_cell", (2, None),
+                 labels=("bpc2", "bpcNone")),
+            Axis("max_rows", (72, 144, 1152),
+                 labels=tuple(f"rows{r}" for r in (72, 144, 1152))),
+        ),
+        trials=1,
+    )
+    res16 = run_bench_sweep(fig16)
+    emit_sweep("fig16", res16,
+               fmt=lambda r: f"acc={r.mean:.4f} (drop={base - r.mean:+.4f})")

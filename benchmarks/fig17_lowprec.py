@@ -6,46 +6,69 @@ weight/activation precision (PTQ) and swept over state-proportional error.
 Claim validated: under the same cell error, the relative accuracy drop of
 the 4-bit deployment is smaller — the coarse activation grid rounds away
 accumulated analog error (even though its error-free accuracy is lower and
-its average conductance is higher, both as the paper notes)."""
+its average conductance is higher, both as the paper notes).
 
-import dataclasses
-import time
+Two SweepSpecs sharing a zipped precision axis: the ideal (error-free,
+single-trial) baselines, and the error grid (precision x alpha, trials
+vmapped, alphas batched as traced scalars within each precision's compile
+group)."""
 
 from repro.core.adc import ADCConfig
 from repro.core.analog import AnalogSpec
 from repro.core.errors import state_proportional
 from repro.core.mapping import MappingConfig
 
-from benchmarks.common import Timer, analog_accuracy, emit, train_mlp
+from repro.sweep import Axis, SweepSpec
 
+from benchmarks.common import (
+    Timer, emit, emit_sweep, run_bench_sweep, trials_for)
 
-def spec_bits(weight_bits, err_alpha):
-    return AnalogSpec(
-        mapping=MappingConfig(scheme="differential",
-                              weight_bits=weight_bits),
-        adc=ADCConfig(style="calibrated", bits=8),
-        error=state_proportional(err_alpha),
-        input_accum="analog", max_rows=1152,
-        input_bits=weight_bits,
-    )
+ALPHAS = (0.1, 0.2)
+
+BITS_AXIS = Axis(
+    ("mapping.weight_bits", "input_bits"),
+    ((8, 8), (4, 4)),
+    labels=("8bit", "4bit"),
+)
+
+BASE = AnalogSpec(
+    mapping=MappingConfig(scheme="differential"),
+    adc=ADCConfig(style="calibrated", bits=8),
+    input_accum="analog",
+    max_rows=1152,
+)
 
 
 def main(timer: Timer):
-    params = train_mlp()
-    base = {}
+    ideal = run_bench_sweep(SweepSpec(
+        name="fig17_ideal",
+        base=BASE,
+        axes=(BITS_AXIS,),
+        trials=1,
+    ))
+    base = {wb: ideal.mean(f"{wb}bit") for wb in (8, 4)}
     for wb in (8, 4):
-        t0 = time.perf_counter()
-        m0, _ = analog_accuracy(params, spec_bits(wb, 0.0), trials=1)
-        base[wb] = m0
-        emit(f"fig17_{wb}bit_ideal", (time.perf_counter() - t0) * 1e6,
-             f"acc={m0:.4f}")
+        emit(f"fig17_{wb}bit_ideal", ideal[f"{wb}bit"].wall_s * 1e6,
+             f"acc={base[wb]:.4f}")
+
+    swept = run_bench_sweep(SweepSpec(
+        name="fig17_prop",
+        base=BASE,
+        axes=(
+            BITS_AXIS,
+            Axis("error", tuple(state_proportional(a) for a in ALPHAS),
+                 labels=tuple(f"prop{a}" for a in ALPHAS)),
+        ),
+        trials=trials_for(5),
+    ))
     drops = {}
     for wb in (8, 4):
-        for a in (0.1, 0.2):
-            m, s = analog_accuracy(params, spec_bits(wb, a), trials=5)
-            drops[(wb, a)] = base[wb] - m
-            emit(f"fig17_{wb}bit_prop{a}", 0.0,
-                 f"acc={m:.4f}+-{s:.4f} (rel drop={base[wb]-m:+.4f})")
+        for a in ALPHAS:
+            r = swept[f"{wb}bit_prop{a}"]
+            drops[(wb, a)] = base[wb] - r.mean
+            emit(f"fig17_{wb}bit_prop{a}", r.wall_s * 1e6 / swept.sweep.trials,
+                 f"acc={r.mean:.4f}+-{r.std:.4f} "
+                 f"(rel drop={base[wb]-r.mean:+.4f})")
     emit("fig17_claim_coarse_quant_suppresses", 0.0,
          f"drop@0.2: 4bit={drops[(4, 0.2)]:.4f} vs 8bit={drops[(8, 0.2)]:.4f} "
          f"(claim: 4bit <= 8bit)")

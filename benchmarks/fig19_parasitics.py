@@ -8,20 +8,33 @@ Claims validated:
     parasitic resistance than differential cells (Fig. 19(c));
   * differential accuracy loss is negligible at R_p_hat <= 1e-5 (the
     realistic operating point for >=100 kOhm cells in scaled metal).
-"""
 
-import time
+Fig. 18 is a deterministic per-scheme metric (FunctionEvaluator); the
+Fig. 19(c) accuracy grid is a scheme x r_hat SweepSpec.  ``r_hat``
+selects the tridiagonal bit-line solve (a different compiled program), so
+each parasitic level is its own compile group; ``test_n=256`` applies the
+paper's own subset trick for the solve's cost (Sec. 9.4 skips it
+entirely)."""
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.adc import ADCConfig
-from repro.core.analog import AnalogSpec, analog_matmul, program
-from repro.core.errors import ErrorModel
+from repro.core.analog import AnalogSpec, program
 from repro.core.mapping import MappingConfig
+from repro.sweep import Axis, FunctionEvaluator, SweepSpec
 
 from benchmarks.common import (
-    Timer, analog_accuracy, digital_accuracy, emit, eval_data, train_mlp)
+    Timer, digital_accuracy, emit, emit_sweep, eval_data, run_bench_sweep,
+    train_mlp)
+
+SCHEME_AXIS = Axis(
+    ("mapping.scheme", "input_accum"),
+    (("differential", "analog"), ("offset", "digital")),
+    labels=("differential", "offset"),
+)
+
+R_HATS = (1e-5, 1e-4, 1e-3)
 
 
 def main(timer: Timer):
@@ -31,35 +44,45 @@ def main(timer: Timer):
     # --- Fig. 18: accumulated bit-line currents ---------------------------
     xca, _, _, _ = eval_data()
     w = params[1][0]
-    for scheme in ("offset", "differential"):
-        spec = AnalogSpec(
-            mapping=MappingConfig(scheme=scheme),
-            adc=ADCConfig(style="none"), error=ErrorModel(),
-            input_accum="digital", max_rows=1152)
-        aw = program(w, spec)
-        # LSB input plane activates the most rows (paper Fig. 18)
+
+    def bitline_current(spec: AnalogSpec):
         from repro.core.quant import bit_planes, quantize_acts
 
+        aw = program(w, spec)
+        # LSB input plane activates the most rows (paper Fig. 18)
         h = jax.nn.relu(xca[:64] @ params[0][0] + params[0][1])
         xq = quantize_acts(h, 8, signed=True)
-        planes = bit_planes(xq.values, 7)
-        lsb = planes[0]
-        i_pos = jnp.abs(lsb) @ aw.g_pos[0, 0]          # bottom-of-line current
-        emit(f"fig18_current_{scheme}", 0.0,
-             f"mean_bitline_current={float(jnp.mean(i_pos)):.2f} "
+        lsb = bit_planes(xq.values, 7)[0]
+        i_pos = jnp.abs(lsb) @ aw.g_pos[0, 0]      # bottom-of-line current
+        return jnp.mean(i_pos)
+
+    fig18 = SweepSpec(
+        name="fig18",
+        base=AnalogSpec(adc=ADCConfig(style="none"), input_accum="digital",
+                        max_rows=1152),
+        axes=(Axis("mapping.scheme", ("offset", "differential")),),
+        trials=0,
+    )
+    res18 = run_bench_sweep(
+        fig18, FunctionEvaluator(
+            bitline_current, name="fig18_current",
+            data=(w, params[0][0], params[0][1], xca)))
+    for r in res18:
+        emit(f"fig18_current_{r.coords['mapping.scheme']}", 0.0,
+             f"mean_bitline_current={r.values[0]:.2f} "
              f"(units of I_max; rows={w.shape[0]})")
 
     # --- Fig. 19(c): accuracy vs normalized parasitic resistance ----------
-    for scheme, accum in (("differential", "analog"), ("offset", "digital")):
-        for r_hat in (1e-5, 1e-4, 1e-3):
-            spec = AnalogSpec(
-                mapping=MappingConfig(scheme=scheme),
-                adc=ADCConfig(style="none"), error=ErrorModel(),
-                input_accum=accum, max_rows=256, r_hat=r_hat)
-            t0 = time.perf_counter()
-            # 256-sample subset: the bit-line circuit solve is the paper's
-            # own tractability bottleneck (Sec. 9.4 skips it entirely)
-            m, s = analog_accuracy(params, spec, trials=1, test_n=256)
-            emit(f"fig19_{scheme}_r{r_hat:g}",
-                 (time.perf_counter() - t0) * 1e6,
-                 f"acc={m:.4f} (drop={base - m:+.4f})")
+    fig19 = SweepSpec(
+        name="fig19",
+        base=AnalogSpec(adc=ADCConfig(style="none"), max_rows=256),
+        axes=(
+            SCHEME_AXIS,
+            Axis("r_hat", R_HATS, labels=tuple(f"r{r:g}" for r in R_HATS)),
+        ),
+        trials=1,
+        test_n=256,
+    )
+    res19 = run_bench_sweep(fig19)
+    emit_sweep("fig19", res19,
+               fmt=lambda r: f"acc={r.mean:.4f} (drop={base - r.mean:+.4f})")

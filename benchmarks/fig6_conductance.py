@@ -1,38 +1,53 @@
 """Fig. 6: average cell conductance per bit slice for each mapping scheme,
 on the trained classifier's weights.  The paper's headline: differential
 mappings of zero-peaked trained weights sit orders of magnitude below the
-~0.5*G_max of offset mappings."""
+~0.5*G_max of offset mappings.
+
+Declared as a mapping-scheme x bits-per-cell grid over a
+:class:`~repro.sweep.FunctionEvaluator` (a deterministic per-point
+metric: no programming trials, no accuracy)."""
 
 import jax.numpy as jnp
 
-from benchmarks.common import Timer, emit, train_mlp
-from repro.core.mapping import MappingConfig, average_conductance, program_weights
+from repro.core.analog import AnalogSpec
+from repro.core.mapping import average_conductance, program_weights
 from repro.core.quant import quantize_weights
+from repro.sweep import Axis, FunctionEvaluator, SweepSpec
+
+from benchmarks.common import Timer, emit, run_bench_sweep, train_mlp
 
 
 def main(timer: Timer):
     params = train_mlp()
     w = params[1][0]  # a representative trained hidden-layer matrix
 
-    rows = []
-    for scheme in ("offset", "differential"):
-        for bpc in (None, 1, 2, 4):
-            mc = MappingConfig(scheme=scheme, bits_per_cell=bpc)
-            mag = None if scheme == "offset" else mc.magnitude_bits
-            qt = quantize_weights(w, 8, magnitude_bits=mag)
+    def avg_g(spec: AnalogSpec):
+        mc = spec.mapping
+        mag = None if mc.scheme == "offset" else mc.magnitude_bits
+        qt = quantize_weights(w, 8, magnitude_bits=mag)
+        return average_conductance(
+            program_weights(qt.values.astype(jnp.int32), mc))
 
-            def run():
-                pw = program_weights(qt.values.astype(jnp.int32), mc)
-                return average_conductance(pw)
+    sweep = SweepSpec(
+        name="fig6",
+        base=AnalogSpec(),
+        axes=(
+            Axis("mapping.scheme", ("offset", "differential"),
+                 labels=("offset", "differential")),
+            Axis("mapping.bits_per_cell", (None, 1, 2, 4),
+                 labels=("bpcNone", "bpc1", "bpc2", "bpc4")),
+        ),
+        trials=0,
+    )
+    res = run_bench_sweep(
+        sweep, FunctionEvaluator(avg_g, name="fig6_avg_conductance",
+                                 data=(w,)))
+    for r in res:
+        slices = "/".join(f"{x:.4f}" for x in r.values[0])
+        emit(f"fig6_{r.tag}", r.wall_s * 1e6, f"avg_g_per_slice={slices}")
 
-            us = timer.time(run)
-            g = run()
-            slices = "/".join(f"{float(x):.4f}" for x in g)
-            rows.append((scheme, bpc, g))
-            emit(f"fig6_{scheme}_bpc{bpc}", us, f"avg_g_per_slice={slices}")
-
-    off_u = float(rows[0][2][0])      # offset unsliced
-    dif_u = float(rows[4][2][0])      # differential unsliced
+    off_u = res["offset_bpcNone"].values[0][0]
+    dif_u = res["differential_bpcNone"].values[0][0]
     emit("fig6_ratio_offset_vs_diff", 0.0,
          f"offset_avg={off_u:.4f} diff_avg={dif_u:.4f} "
          f"ratio={off_u / max(dif_u, 1e-9):.1f}x (paper: orders of magnitude)")

@@ -10,6 +10,11 @@ Claims validated:
     zero-peaked ImageNet nets);
   * finer slicing helps slightly under state-independent errors (the
     sqrt(3) SNR effect of Eq. 9/10).
+
+Each figure is one SweepSpec: a zipped (scheme, input-accumulation) axis
+x bits-per-cell x error magnitude.  All points sharing a compiled shape
+(same scheme/slicing) run as one jitted evaluation with the error
+magnitudes batched as traced scalars and trials vmapped over PRNG keys.
 """
 
 from repro.core.adc import ADCConfig
@@ -17,19 +22,38 @@ from repro.core.analog import AnalogSpec
 from repro.core.errors import state_independent, state_proportional
 from repro.core.mapping import MappingConfig
 
-from benchmarks.common import Timer, analog_accuracy, digital_accuracy, emit, train_mlp
+from repro.sweep import Axis, SweepSpec
+
+from benchmarks.common import (
+    Timer, digital_accuracy, emit, emit_sweep, run_bench_sweep, train_mlp,
+    trials_for)
 
 ALPHAS_IND = (0.01, 0.02, 0.05)
 ALPHAS_PROP = (0.02, 0.05, 0.10)
 
+SCHEME_AXIS = Axis(
+    ("mapping.scheme", "input_accum"),
+    (("offset", "digital"), ("differential", "analog")),
+    labels=("offset", "differential"),
+)
 
-def spec_for(scheme, bpc, err):
-    return AnalogSpec(
-        mapping=MappingConfig(scheme=scheme, bits_per_cell=bpc),
-        adc=ADCConfig(style="none"),
-        error=err,
-        input_accum="analog" if scheme == "differential" else "digital",
-        max_rows=1152,
+
+def fig_sweep(name: str, make_err, alphas) -> SweepSpec:
+    return SweepSpec(
+        name=name,
+        base=AnalogSpec(
+            mapping=MappingConfig(),
+            adc=ADCConfig(style="none"),
+            max_rows=1152,
+        ),
+        axes=(
+            SCHEME_AXIS,
+            Axis("mapping.bits_per_cell", (None, 2),
+                 labels=("bpcNone", "bpc2")),
+            Axis("error", tuple(make_err(a) for a in alphas),
+                 labels=tuple(f"a{a}" for a in alphas)),
+        ),
+        trials=trials_for(5),
     )
 
 
@@ -43,27 +67,19 @@ def main(timer: Timer):
         ("fig8", state_independent, ALPHAS_IND),
         ("fig9", state_proportional, ALPHAS_PROP),
     ):
+        res = run_bench_sweep(fig_sweep(fig, make_err, alphas))
+        emit_sweep(fig, res)
         for scheme in ("offset", "differential"):
-            for bpc in (None, 2):
+            for bpc in ("bpcNone", "bpc2"):
                 for a in alphas:
-                    spec = spec_for(scheme, bpc, make_err(a))
-                    import time
-
-                    t0 = time.perf_counter()
-                    m, s = analog_accuracy(params, spec, trials=5)
-                    us = (time.perf_counter() - t0) * 1e6 / 5
-                    key = (fig, scheme, bpc, a)
-                    results[key] = m
-                    emit(
-                        f"{fig}_{scheme}_bpc{bpc}_a{a}", us,
-                        f"acc={m:.4f}+-{s:.4f}",
-                    )
+                    results[(fig, scheme, bpc, a)] = res.mean(
+                        f"{scheme}_{bpc}_a{a}")
 
     # claim checks (printed as derived values)
-    off_ind = results[("fig8", "offset", None, 0.02)]
-    dif_ind = results[("fig8", "differential", None, 0.02)]
-    off_prp = results[("fig9", "offset", None, 0.05)]
-    dif_prp = results[("fig9", "differential", None, 0.05)]
+    off_ind = results[("fig8", "offset", "bpcNone", 0.02)]
+    dif_ind = results[("fig8", "differential", "bpcNone", 0.02)]
+    off_prp = results[("fig9", "offset", "bpcNone", 0.05)]
+    dif_prp = results[("fig9", "differential", "bpcNone", 0.05)]
     emit("fig8_claim_diff_beats_offset_ind", 0.0,
          f"diff={dif_ind:.3f} > offset={off_ind:.3f}: {dif_ind > off_ind}")
     emit("fig9_claim_diff_prop_most_robust", 0.0,

@@ -1,17 +1,35 @@
-"""Kernel microbenchmarks: Pallas (interpret on CPU) vs jnp oracle, plus
-the vectorized analog path at serving-relevant shapes.  On TPU the same
-entry points compile to Mosaic; interpret-mode timings only demonstrate
-correctness-path overhead, the derived column carries the work sizes."""
+"""Kernel microbenchmarks + sweep-engine wall-clock comparison.
+
+Part 1: Pallas (interpret on CPU) vs jnp oracle at serving-relevant
+shapes.  On TPU the same entry points compile to Mosaic; interpret-mode
+timings only demonstrate correctness-path overhead, the derived column
+carries the work sizes.
+
+Part 2: the tentpole speedup measurement — a 16-point design grid
+(2 mapping schemes x 8 error magnitudes, 3 programming trials each)
+evaluated (a) by the legacy serial per-point loop the benchmarks used to
+hand-roll (``repro.sweep.serial_accuracy``, one eager trial at a time)
+and (b) by the vectorized sweep engine (trials vmapped, same-shape
+points batched as traced scalars, one jitted call per scheme).  Emits
+both wall-clocks and the speedup."""
+
+import time
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.adc import ADCConfig
+from repro.core.analog import AnalogSpec
+from repro.core.errors import state_proportional
+from repro.core.mapping import MappingConfig
 from repro.kernels import ops, ref
+from repro.sweep import Axis, SweepSpec
 
-from benchmarks.common import Timer, emit
+from benchmarks.common import (
+    Timer, analog_accuracy, emit, eval_data, run_bench_sweep, train_mlp)
 
 
-def main(timer: Timer):
+def kernel_micro(timer: Timer):
     for (m, p, rows, n) in [(128, 1, 1152, 256), (256, 2, 1152, 512)]:
         ks = jax.random.split(jax.random.PRNGKey(0), 3)
         x = jnp.round(jax.random.normal(ks[0], (m, p, rows)) * 40)
@@ -46,3 +64,62 @@ def main(timer: Timer):
         us_r = timer.time(f_r, g, x)
         emit(f"kernel_bitline_{m}x{k}x{n}", us_k,
              f"ref_us={us_r:.1f} tridiag_solves={m*n}")
+
+
+def sweep_engine_speedup():
+    """Vectorized sweep engine vs the legacy serial loop, 16-point grid."""
+    params = train_mlp()
+    eval_data()   # warm the dataset cache so neither path pays for it
+    alphas = (0.01, 0.02, 0.03, 0.04, 0.05, 0.06, 0.07, 0.08)
+    trials = 3
+    sweep = SweepSpec(
+        name="kernelbench_grid",
+        base=AnalogSpec(adc=ADCConfig(style="none"), max_rows=1152),
+        axes=(
+            Axis(("mapping.scheme", "input_accum"),
+                 (("differential", "analog"), ("offset", "digital")),
+                 labels=("differential", "offset")),
+            Axis("error", tuple(state_proportional(a) for a in alphas),
+                 labels=tuple(f"a{a}" for a in alphas)),
+        ),
+        trials=trials,
+    )
+    points = sweep.expand()
+
+    t0 = time.perf_counter()
+    res = run_bench_sweep(sweep, cache=False)   # no cache: honest timing
+    t_cold = time.perf_counter() - t0           # includes jit compilation
+
+    t0 = time.perf_counter()
+    run_bench_sweep(sweep, cache=False)         # compiled fns reused
+    t_warm = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    serial = {pt.tag: analog_accuracy(params, pt.spec, trials=trials)[0]
+              for pt in points}
+    t_serial = time.perf_counter() - t0
+
+    max_dev = max(abs(res.mean(tag) - acc) for tag, acc in serial.items())
+    n = len(points)
+    emit(f"sweep_vectorized_{n}pt_cold", t_cold * 1e6,
+         f"points={n} trials={trials} wall_s={t_cold:.2f} "
+         f"(includes compile)")
+    emit(f"sweep_vectorized_{n}pt_warm", t_warm * 1e6,
+         f"points={n} trials={trials} wall_s={t_warm:.2f}")
+    emit(f"sweep_legacy_serial_{n}pt", t_serial * 1e6,
+         f"points={len(points)} trials={trials} wall_s={t_serial:.2f}")
+    emit("sweep_speedup", 0.0,
+         f"serial={t_serial:.2f}s vs vectorized cold={t_cold:.2f}s "
+         f"({t_serial / max(t_cold, 1e-9):.2f}x) / warm={t_warm:.2f}s "
+         f"({t_serial / max(t_warm, 1e-9):.2f}x) "
+         f"max_acc_dev={max_dev:.4f}")
+
+
+def main(timer: Timer):
+    # the two parts are independent: a Pallas interpret-mode failure (the
+    # kernels are TPU-first) must not mask the sweep-engine measurement.
+    try:
+        kernel_micro(timer)
+    except Exception as e:
+        emit("kernel_micro_ERROR", 0.0, repr(e)[:200])
+    sweep_engine_speedup()

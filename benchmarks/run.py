@@ -2,7 +2,11 @@
 
 Prints ``name,us_per_call,derived`` CSV rows.  Usage::
 
-    PYTHONPATH=src python -m benchmarks.run [--only fig8_9]
+    PYTHONPATH=src python -m benchmarks.run [--only fig8_9] [--smoke]
+
+``--smoke`` is the CI fast path: one benchmark (Fig. 10's On/Off sweep —
+a single compile group exercising the whole vectorized engine), one
+programming trial per point, fresh (uncached) evaluation.
 """
 
 import argparse
@@ -24,17 +28,27 @@ MODULES = [
     "roofline",
 ]
 
+SMOKE_MODULES = ["fig10_onoff"]
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI fast path: one sweep, one trial per point")
     args = ap.parse_args()
 
+    from benchmarks import common
     from benchmarks.common import Timer, emit
+
+    modules = MODULES
+    if args.smoke:
+        common.SMOKE = True
+        modules = SMOKE_MODULES
 
     timer = Timer(reps=3)
     print("name,us_per_call,derived")
-    for mod_name in MODULES:
+    for mod_name in modules:
         if args.only and args.only not in mod_name:
             continue
         t0 = time.time()

@@ -5,14 +5,17 @@ Claims validated: Design E (ISAAC-like offset/near-FPG) costs ~100x the
 energy and ~45x the area of Design A (differential, unsliced, analog input
 accumulation); unsliced beats sliced; larger arrays amortize ADC cost;
 analog input accumulation buys 2-4x.
-"""
+
+The five designs are an explicit-point SweepSpec over a deterministic
+FunctionEvaluator returning the named energy/area metrics per point."""
 
 from repro.core import energy as en
 from repro.core.adc import ADCConfig
 from repro.core.analog import AnalogSpec
 from repro.core.mapping import MappingConfig
+from repro.sweep import FunctionEvaluator, SweepSpec
 
-from benchmarks.common import Timer, emit
+from benchmarks.common import Timer, emit, run_bench_sweep
 
 # (name, scheme, bpc, rows, accum, g_avg, paper_fj_op, paper_area_mm2)
 DESIGNS = [
@@ -31,30 +34,59 @@ def spec_of(scheme, bpc, rows, accum):
         input_accum=accum, max_rows=rows)
 
 
+def _design_key(spec: AnalogSpec):
+    """The fields that identify a Table 3 design (robust to repr changes)."""
+    return (spec.mapping.scheme, spec.mapping.bits_per_cell,
+            spec.max_rows, spec.input_accum)
+
+
 def main(timer: Timer):
-    vals = {}
-    for name, scheme, bpc, rows, accum, g_avg, p_e, p_a in DESIGNS:
-        spec = spec_of(scheme, bpc, rows, accum)
+    g_avg_of = {_design_key(spec_of(s, b, r, a)): g
+                for _, s, b, r, a, g, _, _ in DESIGNS}
+    assert len(g_avg_of) == len(DESIGNS), "designs must be distinguishable"
+
+    def core_metrics(spec: AnalogSpec):
+        g_avg = g_avg_of[_design_key(spec)]
         costs = en.core_costs(spec, 1152, 256, g_avg=g_avg)
         bd = en.energy_breakdown(spec, 1152, 256, g_avg=g_avg)
-        vals[name] = costs
+        return {
+            "energy_fj_per_op": costs.energy_fj_per_op,
+            "area_mm2": costs.area_mm2,
+            "adc_conversions": costs.adc_conversions,
+            "n_arrays": costs.n_arrays,
+            "breakdown_nj": {k: v / 1e3 for k, v in bd.items()},
+        }
+
+    sweep = SweepSpec.from_points(
+        "table3",
+        [(name, spec_of(s, b, r, a)) for name, s, b, r, a, _, _, _ in DESIGNS],
+        trials=0,
+    )
+    res = run_bench_sweep(
+        sweep, FunctionEvaluator(core_metrics, name="table3_core_costs",
+                                 data=(DESIGNS,)))
+
+    vals = {}
+    for (name, *_), p_e, p_a in [(d[:6], d[6], d[7]) for d in DESIGNS]:
+        m = res[name].values[0]
+        vals[name] = m
         emit(
             f"table3_design{name}", 0.0,
-            f"model={costs.energy_fj_per_op:.1f}fJ/op (paper {p_e}) "
-            f"area={costs.area_mm2:.2f}mm2 (paper {p_a}) "
-            f"adc_conv={costs.adc_conversions} arrays={costs.n_arrays}",
+            f"model={m['energy_fj_per_op']:.1f}fJ/op (paper {p_e}) "
+            f"area={m['area_mm2']:.2f}mm2 (paper {p_a}) "
+            f"adc_conv={m['adc_conversions']} arrays={m['n_arrays']}",
         )
         emit(
             f"fig22b_breakdown_{name}", 0.0,
-            " ".join(f"{k}={v/1e3:.1f}nJ" for k, v in bd.items()),
+            " ".join(f"{k}={v:.1f}nJ" for k, v in m["breakdown_nj"].items()),
         )
-    ra = vals["E"].energy_fj_per_op / vals["A"].energy_fj_per_op
-    rarea = vals["E"].area_mm2 / vals["A"].area_mm2
+    ra = vals["E"]["energy_fj_per_op"] / vals["A"]["energy_fj_per_op"]
+    rarea = vals["E"]["area_mm2"] / vals["A"]["area_mm2"]
     emit("table3_claim_E_vs_A", 0.0,
          f"energy_ratio={ra:.0f}x (paper 107x) area_ratio={rarea:.0f}x "
          f"(paper 46x)")
     emit("table3_claim_analog_accum", 0.0,
-         f"D/A={vals['D'].energy_fj_per_op/vals['A'].energy_fj_per_op:.1f}x "
+         f"D/A={vals['D']['energy_fj_per_op']/vals['A']['energy_fj_per_op']:.1f}x "
          f"(paper ~3x: analog input accumulation wins)")
     fpg_bits_a = spec_of("differential", None, 1152, "analog").fpg_adc_bits(1152)
     emit("table3_Bout_designA", 0.0,

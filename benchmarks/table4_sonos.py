@@ -5,16 +5,19 @@ Fig. 20(b)), calibrated 8-bit ADCs.
 Claims validated: differential/unsliced designs (A, C, D) lose only a
 small amount of accuracy; the 1-bit-sliced design (B) is the most robust;
 the offset design (E) loses by far the most.
-"""
 
-import time
+An explicit-point SweepSpec over the named designs; each design is its
+own compile group (distinct shapes), with its five programming trials
+vmapped into one jitted evaluation."""
 
 from repro.core.adc import ADCConfig
 from repro.core.analog import AnalogSpec
 from repro.core.errors import SONOS_ON_OFF, sonos
 from repro.core.mapping import MappingConfig
+from repro.sweep import SweepSpec
 
-from benchmarks.common import Timer, analog_accuracy, digital_accuracy, emit, train_mlp
+from benchmarks.common import (
+    Timer, digital_accuracy, emit, run_bench_sweep, train_mlp, trials_for)
 
 DESIGNS = [
     ("A", "differential", None, 1152, "analog"),
@@ -29,18 +32,24 @@ def main(timer: Timer):
     params = train_mlp()
     base = digital_accuracy(params)
     emit("table4_ideal_cells", 0.0, f"acc={base:.4f}")
-    accs = {}
-    for name, scheme, bpc, rows, accum in DESIGNS:
-        spec = AnalogSpec(
-            mapping=MappingConfig(scheme=scheme, bits_per_cell=bpc,
-                                  on_off_ratio=SONOS_ON_OFF),
-            adc=ADCConfig(style="calibrated", bits=8),
-            error=sonos(), input_accum=accum, max_rows=rows)
-        t0 = time.perf_counter()
-        m, s = analog_accuracy(params, spec, trials=5)
-        accs[name] = m
-        emit(f"table4_design{name}", (time.perf_counter() - t0) * 1e6 / 5,
-             f"acc={m:.4f}+-{s:.4f} (drop={base - m:+.4f})")
+
+    sweep = SweepSpec.from_points(
+        "table4",
+        [
+            (name, AnalogSpec(
+                mapping=MappingConfig(scheme=scheme, bits_per_cell=bpc,
+                                      on_off_ratio=SONOS_ON_OFF),
+                adc=ADCConfig(style="calibrated", bits=8),
+                error=sonos(), input_accum=accum, max_rows=rows))
+            for name, scheme, bpc, rows, accum in DESIGNS
+        ],
+        trials=trials_for(5),
+    )
+    res = run_bench_sweep(sweep)
+    for r in res:
+        emit(f"table4_design{r.tag}", r.wall_s * 1e6 / sweep.trials,
+             f"acc={r.mean:.4f}+-{r.std:.4f} (drop={base - r.mean:+.4f})")
+    accs = {name: res.mean(name) for name, *_ in DESIGNS}
     emit("table4_claim_ordering", 0.0,
          f"E worst: {accs['E']:.3f} < min(A,C,D)="
          f"{min(accs['A'], accs['C'], accs['D']):.3f}; "

@@ -1,15 +1,30 @@
 """Design-space exploration: sweep the analog core design axes and print
 the accuracy / energy / area frontier (the paper's Sec. 9 case study).
 
+Demonstrates the ``repro.sweep`` engine end to end: the five named
+designs are an explicit-point :class:`~repro.sweep.SweepSpec`, accuracy
+comes from the vectorized :class:`~repro.sweep.ClassifierEvaluator`
+(trials vmapped, results cached+resumable on disk), and the energy/area
+columns reuse the same design points through ``repro.core.energy``.
+
 Run: PYTHONPATH=src:. python examples/design_space.py
 """
 
-from benchmarks.common import analog_accuracy, digital_accuracy, train_mlp
+from benchmarks.common import digital_accuracy, run_bench_sweep, train_mlp
 from repro.core import energy as en
 from repro.core.adc import ADCConfig
 from repro.core.analog import AnalogSpec
 from repro.core.errors import SONOS_ON_OFF, sonos
 from repro.core.mapping import MappingConfig
+from repro.sweep import SweepSpec
+
+DESIGNS = [
+    ("differential", None, 1152, "analog", 0.02),
+    ("differential", 1, 1152, "analog", 0.08),
+    ("differential", None, 144, "analog", 0.02),
+    ("differential", None, 1152, "digital", 0.02),
+    ("offset", 2, 72, "digital", 0.5),
+]
 
 
 def main():
@@ -17,22 +32,27 @@ def main():
     base = digital_accuracy(params)
     print(f"digital 8-bit baseline: {base:.4f}\n")
     print(f"{'design':<44}{'acc':>8}{'fJ/op':>10}{'mm^2':>8}")
-    for scheme, bpc, rows, accum, g_avg in [
-        ("differential", None, 1152, "analog", 0.02),
-        ("differential", 1, 1152, "analog", 0.08),
-        ("differential", None, 144, "analog", 0.02),
-        ("differential", None, 1152, "digital", 0.02),
-        ("offset", 2, 72, "digital", 0.5),
-    ]:
-        spec = AnalogSpec(
-            mapping=MappingConfig(scheme=scheme, bits_per_cell=bpc,
-                                  on_off_ratio=SONOS_ON_OFF),
-            adc=ADCConfig(style="calibrated", bits=8),
-            error=sonos(), input_accum=accum, max_rows=rows)
-        acc, _ = analog_accuracy(params, spec, trials=3)
+
+    def name_of(scheme, bpc, rows, accum):
+        return f"{scheme}/bpc={bpc}/rows={rows}/{accum}"
+
+    sweep = SweepSpec.from_points(
+        "example_design_space",
+        [
+            (name_of(scheme, bpc, rows, accum), AnalogSpec(
+                mapping=MappingConfig(scheme=scheme, bits_per_cell=bpc,
+                                      on_off_ratio=SONOS_ON_OFF),
+                adc=ADCConfig(style="calibrated", bits=8),
+                error=sonos(), input_accum=accum, max_rows=rows))
+            for scheme, bpc, rows, accum, _ in DESIGNS
+        ],
+        trials=3,
+    )
+    res = run_bench_sweep(sweep)
+    for (scheme, bpc, rows, accum, g_avg), r in zip(DESIGNS, res):
+        spec = sweep.explicit[r.index][1]
         c = en.core_costs(spec, g_avg=g_avg)
-        name = f"{scheme}/bpc={bpc}/rows={rows}/{accum}"
-        print(f"{name:<44}{acc:>8.4f}{c.energy_fj_per_op:>10.1f}"
+        print(f"{r.tag:<44}{r.mean:>8.4f}{c.energy_fj_per_op:>10.1f}"
               f"{c.area_mm2:>8.2f}")
 
 

@@ -39,8 +39,10 @@ from repro.core import parasitics
 from repro.core.errors import ErrorModel
 from repro.core.mapping import (
     MappingConfig,
+    ProgrammedCodes,
     ProgrammedWeights,
-    program_weights,
+    codes_to_weights,
+    program_int_codes,
 )
 from repro.core.quant import (
     QuantizedTensor,
@@ -146,23 +148,50 @@ def _partition(arr: jax.Array, k: int, p: int, rows: int) -> jax.Array:
     return arr.reshape(s, p, rows, n)
 
 
-def program(
-    w: jax.Array,
-    spec: AnalogSpec,
-    key: Optional[jax.Array] = None,
-) -> AnalogWeights:
-    """Quantize + map + perturb a float weight matrix ``(K, N)``.
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class ProgrammedMatrix:
+    """Deterministic half of :func:`program`: integer code stacks + scale.
 
-    Zero-padding rows added by partitioning are programmed at code 0 —
-    with finite On/Off they still carry ``g_min`` and participate in the
-    error/parasitic models, exactly like a real partially-used array.
+    Everything here is independent of the trial PRNG key *and* of the
+    On/Off ratio, so the sweep engine (``repro.sweep``) caches one
+    ``ProgrammedMatrix`` per ``(mapping signature, weights hash)`` and
+    amortizes quantize+map across all trials and all design points that
+    share a compiled shape.
     """
+
+    codes: ProgrammedCodes
+    w_scale: jax.Array
+    k: int = dataclasses.field(metadata=dict(static=True))
+    n: int = dataclasses.field(metadata=dict(static=True))
+
+
+def program_codes(w: jax.Array, spec: AnalogSpec) -> ProgrammedMatrix:
+    """Quantize + map a float weight matrix ``(K, N)`` to integer codes."""
     assert w.ndim == 2, f"program expects (K, N), got {w.shape}"
     k, n = w.shape
     m = spec.mapping
     mag_bits = None if m.scheme == "offset" else m.magnitude_bits
     qt = quantize_weights(w, m.weight_bits, magnitude_bits=mag_bits)
-    pw = program_weights(qt.values.astype(jnp.int32), m)
+    pc = program_int_codes(qt.values.astype(jnp.int32), m)
+    return ProgrammedMatrix(
+        codes=pc, w_scale=qt.scale.astype(jnp.float32), k=k, n=n
+    )
+
+
+def program_from_codes(
+    pm: ProgrammedMatrix,
+    spec: AnalogSpec,
+    key: Optional[jax.Array] = None,
+) -> AnalogWeights:
+    """Conductance-convert + partition + perturb cached code stacks.
+
+    This is the per-trial half of :func:`program`; it is tracer-safe in
+    ``spec.error.alpha`` and ``spec.mapping.on_off_ratio`` so vmapped
+    trials and scalar-batched design points go through one compilation.
+    """
+    k, n = pm.k, pm.n
+    pw = codes_to_weights(pm.codes, spec.mapping)
 
     p = spec.n_partitions(k)
     rows = spec.rows_per_partition(k)
@@ -181,10 +210,24 @@ def program(
         g_pos=g_pos.astype(dt),
         g_neg=g_neg.astype(dt) if g_neg is not None else None,
         g_unit=g_unit.astype(dt) if g_unit is not None else None,
-        w_scale=qt.scale.astype(jnp.float32),
+        w_scale=pm.w_scale,
         k=k,
         n=n,
     )
+
+
+def program(
+    w: jax.Array,
+    spec: AnalogSpec,
+    key: Optional[jax.Array] = None,
+) -> AnalogWeights:
+    """Quantize + map + perturb a float weight matrix ``(K, N)``.
+
+    Zero-padding rows added by partitioning are programmed at code 0 —
+    with finite On/Off they still carry ``g_min`` and participate in the
+    error/parasitic models, exactly like a real partially-used array.
+    """
+    return program_from_codes(program_codes(w, spec), spec, key)
 
 
 def _apply_line(

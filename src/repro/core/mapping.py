@@ -84,8 +84,17 @@ class MappingConfig:
         return 2 ** self.cell_bits
 
     @property
-    def g_min(self) -> float:
-        return 0.0 if math.isinf(self.on_off_ratio) else 1.0 / self.on_off_ratio
+    def g_min(self):
+        """``1 / on_off_ratio`` (0 for an infinite On/Off ratio).
+
+        Tracer-safe: the sweep engine batches design points that differ only
+        in ``on_off_ratio`` by substituting a traced scalar, so the infinity
+        check must only run for concrete Python floats (``1/inf == 0``
+        holds for traced values anyway).
+        """
+        if isinstance(self.on_off_ratio, (int, float)):
+            return 0.0 if math.isinf(self.on_off_ratio) else 1.0 / self.on_off_ratio
+        return 1.0 / self.on_off_ratio
 
     @property
     def cells_per_weight(self) -> int:
@@ -165,8 +174,29 @@ class ProgrammedWeights:
     g_unit: Optional[jax.Array]
 
 
-def program_weights(w_int: jax.Array, cfg: MappingConfig) -> ProgrammedWeights:
-    """Map signed integer weights to conductance stacks (error-free)."""
+@dataclasses.dataclass(frozen=True)
+class ProgrammedCodes:
+    """Integer cell-code stacks for one weight matrix, pre-conductance.
+
+    Same layout as :class:`ProgrammedWeights` but in code space
+    ``[0, L-1]``.  This is the g_min-*independent* half of programming: the
+    sweep engine caches it per ``(mapping, weights)`` and converts to
+    conductances in-trace, which lets design points that differ only in
+    ``on_off_ratio`` share one compiled evaluation.
+    """
+
+    c_pos: jax.Array
+    c_neg: Optional[jax.Array]
+    c_unit: Optional[jax.Array]
+
+
+jax.tree_util.register_dataclass(
+    ProgrammedCodes, data_fields=("c_pos", "c_neg", "c_unit"), meta_fields=()
+)
+
+
+def program_int_codes(w_int: jax.Array, cfg: MappingConfig) -> ProgrammedCodes:
+    """Map signed integer weights to cell-code stacks (error-free)."""
     if cfg.scheme == "offset":
         prog = w_int + cfg.offset_code                       # strictly >= 0
         slices = (
@@ -174,18 +204,16 @@ def program_weights(w_int: jax.Array, cfg: MappingConfig) -> ProgrammedWeights:
             if cfg.sliced
             else prog[None]
         )
-        g_pos = codes_to_conductance(slices, cfg)
-        g_unit = None
+        c_unit = None
         if cfg.unit_column:
-            unit_codes = slice_codes(
+            c_unit = slice_codes(
                 jnp.full((w_int.shape[0], 1), cfg.offset_code, jnp.int32),
                 cfg.cell_bits,
                 cfg.n_slices,
             ) if cfg.sliced else jnp.full(
                 (1, w_int.shape[0], 1), cfg.offset_code, jnp.int32
             )
-            g_unit = codes_to_conductance(unit_codes, cfg)
-        return ProgrammedWeights(g_pos=g_pos, g_neg=None, g_unit=g_unit)
+        return ProgrammedCodes(c_pos=slices, c_neg=None, c_unit=c_unit)
 
     # differential: sign-magnitude; one line of each pair stays at code 0.
     mag = jnp.abs(w_int)
@@ -196,11 +224,20 @@ def program_weights(w_int: jax.Array, cfg: MappingConfig) -> ProgrammedWeights:
         sn = slice_codes(neg, cfg.cell_bits, cfg.n_slices)
     else:
         sp, sn = pos[None], neg[None]
+    return ProgrammedCodes(c_pos=sp, c_neg=sn, c_unit=None)
+
+
+def codes_to_weights(pc: ProgrammedCodes, cfg: MappingConfig) -> ProgrammedWeights:
+    """Convert code stacks to conductance stacks (the g_min-dependent half)."""
+    conv = lambda c: None if c is None else codes_to_conductance(c, cfg)
     return ProgrammedWeights(
-        g_pos=codes_to_conductance(sp, cfg),
-        g_neg=codes_to_conductance(sn, cfg),
-        g_unit=None,
+        g_pos=conv(pc.c_pos), g_neg=conv(pc.c_neg), g_unit=conv(pc.c_unit)
     )
+
+
+def program_weights(w_int: jax.Array, cfg: MappingConfig) -> ProgrammedWeights:
+    """Map signed integer weights to conductance stacks (error-free)."""
+    return codes_to_weights(program_int_codes(w_int, cfg), cfg)
 
 
 def reconstruct_weights(pw: ProgrammedWeights, cfg: MappingConfig) -> jax.Array:

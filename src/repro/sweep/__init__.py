@@ -1,0 +1,53 @@
+"""``repro.sweep`` — the vectorized design-space sweep engine.
+
+Replaces the hand-rolled per-design-point Python loops of the benchmark
+scripts with one declarative, batched, cached, mesh-shardable path:
+
+>>> from repro.sweep import Axis, SweepSpec, ClassifierEvaluator, run_sweep
+>>> sweep = SweepSpec(
+...     name="onoff",
+...     base=spec0,
+...     axes=(Axis("mapping.on_off_ratio", (10.0, 100.0, float("inf"))),),
+...     trials=5,
+... )
+>>> results = run_sweep(sweep, ClassifierEvaluator(layers, xca, xte, yte),
+...                     cache_dir="benchmarks/_cache")
+>>> results.mean("on_off_ratio100")
+
+See DESIGN.md §Sweep-engine for the execution model.
+"""
+
+from repro.sweep.dispatch import shard_leading, sweep_mesh
+from repro.sweep.evaluate import (
+    ClassifierEvaluator,
+    FunctionEvaluator,
+    materialize,
+    serial_accuracy,
+    trial_accuracy,
+    trial_keys,
+)
+from repro.sweep.executor import compile_groups, run_sweep
+from repro.sweep.results import PointResult, SweepCache, SweepResults, point_key
+from repro.sweep.spec import Axis, DesignPoint, SweepSpec, get_field, set_field
+
+__all__ = [
+    "Axis",
+    "ClassifierEvaluator",
+    "DesignPoint",
+    "FunctionEvaluator",
+    "PointResult",
+    "SweepCache",
+    "SweepResults",
+    "SweepSpec",
+    "compile_groups",
+    "get_field",
+    "materialize",
+    "point_key",
+    "run_sweep",
+    "serial_accuracy",
+    "set_field",
+    "shard_leading",
+    "sweep_mesh",
+    "trial_accuracy",
+    "trial_keys",
+]

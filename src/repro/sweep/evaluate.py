@@ -1,0 +1,317 @@
+"""Sweep evaluators: the vectorized trial pipeline and its serial reference.
+
+The paper's metric loop (program -> calibrate -> evaluate, averaged over
+programming trials, Sec. 5) appears here exactly once, in
+:func:`trial_accuracy`.  Around it:
+
+* :class:`ClassifierEvaluator` — the vectorized executor backend.  Trials
+  become a ``vmap`` over PRNG keys; design points that share a compiled
+  shape (same mapping scheme / slice count / partition count / ADC style)
+  are batched into a single jitted evaluation by substituting their
+  error magnitude and On/Off ratio as *traced scalars* into the
+  :class:`~repro.core.analog.AnalogSpec`.  The deterministic half of
+  programming (quantize + integer code mapping) is cached per
+  ``(mapping signature, weights hash)`` via
+  :func:`repro.core.analog.program_codes`, so per-trial work is only
+  perturb + matmul + ADC.
+* :func:`serial_accuracy` — the legacy one-point-at-a-time eager loop the
+  benchmark scripts used before the sweep engine existed.  It is kept as
+  the bit-faithful reference: the equivalence test
+  (``tests/test_sweep.py``) and the ``kernelbench`` wall-clock comparison
+  both pin the vectorized path against it, same seeds in, same
+  accuracies out.
+* :class:`FunctionEvaluator` — generic per-point metrics (conductance
+  averages, energy models, SNR probes) with optional vmapped trials.
+
+See DESIGN.md §Sweep-engine for the batching rules and their tracer-
+safety constraints.
+"""
+
+from __future__ import annotations
+
+import hashlib
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.analog import (
+    AnalogSpec,
+    ProgrammedMatrix,
+    analog_matmul,
+    program,
+    program_codes,
+    program_from_codes,
+)
+from repro.core.calibrate import constrain_power_of_two
+from repro.core.quant import calibrate_act_range
+from repro.sweep.dispatch import shard_point_trial_batch
+from repro.sweep.spec import set_field
+
+
+def trial_keys(seed: int, trials: int) -> jax.Array:
+    """The per-trial key stack, identical to the legacy serial derivation."""
+    root = jax.random.PRNGKey(seed)
+    return jnp.stack([jax.random.fold_in(root, t) for t in range(trials)])
+
+
+def materialize(template: AnalogSpec, assignments: Dict[str, Any]) -> AnalogSpec:
+    """Substitute (possibly traced) values into a template spec."""
+    spec = template
+    for path, value in assignments.items():
+        spec = set_field(spec, path, value)
+    return spec
+
+
+def trial_accuracy(
+    layers: Sequence[Tuple[jax.Array, jax.Array]],
+    spec: AnalogSpec,
+    trial_key: jax.Array,
+    xca: jax.Array,
+    xte: jax.Array,
+    yte: jax.Array,
+    *,
+    act_fn: Callable = jax.nn.relu,
+    pms: Optional[Sequence[ProgrammedMatrix]] = None,
+) -> jax.Array:
+    """One programming trial of the analog classifier (paper Sec. 5).
+
+    Per layer: program (or reuse cached codes), calibrate the activation
+    clip on the calibration split, run the collect pass for calibrated
+    ADC ranges (power-of-two constrained when sliced, Sec. 6.2), then
+    evaluate test and calibration batches through the analog pipeline.
+    Traceable in the trial key and in ``spec.error.alpha`` /
+    ``spec.mapping.on_off_ratio``.
+    """
+    h_te, h_ca = xte, xca
+    for i, (w, b) in enumerate(layers):
+        layer_key = jax.random.fold_in(trial_key, i)
+        if pms is None:
+            aw = program(w, spec, layer_key)
+        else:
+            aw = program_from_codes(pms[i], spec, layer_key)
+        _, act_hi = calibrate_act_range(h_ca, spec.input_bits)
+        if spec.adc.style == "calibrated":
+            _, stats = analog_matmul(h_ca, aw, spec, act_hi=act_hi,
+                                     collect=True)
+            lo, hi = stats[:, 0], stats[:, 1]
+            if spec.mapping.sliced:
+                lo, hi = constrain_power_of_two(lo, hi)
+            kw = dict(adc_lo=lo, adc_hi=hi)
+        else:
+            kw = {}
+        y_te = analog_matmul(h_te, aw, spec, act_hi=act_hi, **kw) + b
+        y_ca = analog_matmul(h_ca, aw, spec, act_hi=act_hi, **kw) + b
+        if i < len(layers) - 1:
+            h_te, h_ca = act_fn(y_te), act_fn(y_ca)
+        else:
+            h_te = y_te
+    return jnp.mean(jnp.argmax(h_te, -1) == yte)
+
+
+def serial_accuracy(
+    layers: Sequence[Tuple[jax.Array, jax.Array]],
+    spec: AnalogSpec,
+    xca: jax.Array,
+    xte: jax.Array,
+    yte: jax.Array,
+    *,
+    trials: int = 5,
+    seed: int = 1234,
+    act_fn: Callable = jax.nn.relu,
+) -> Tuple[float, float, List[float]]:
+    """The legacy per-point serial loop: one eager trial at a time.
+
+    Kept as the reference implementation the vectorized executor is
+    tested against (and timed against in ``benchmarks/kernelbench.py``).
+    """
+    root = jax.random.PRNGKey(seed)
+    accs = [
+        float(trial_accuracy(layers, spec, jax.random.fold_in(root, t),
+                             xca, xte, yte, act_fn=act_fn))
+        for t in range(trials)
+    ]
+    return float(np.mean(accs)), float(np.std(accs)), accs
+
+
+def _mapping_signature(spec: AnalogSpec) -> str:
+    """The fields :func:`program_codes` depends on (g_min-independent)."""
+    m = spec.mapping
+    return f"{m.scheme}|{m.weight_bits}|{m.bits_per_cell}|{m.unit_column}"
+
+
+class ClassifierEvaluator:
+    """Vectorized analog accuracy of a feed-forward classifier.
+
+    One instance owns the network weights and the calibration/test splits;
+    the executor hands it compile groups and it returns per-(point, trial)
+    accuracies from a single jitted, optionally mesh-sharded evaluation.
+    """
+
+    #: spec fields batchable as traced scalars.  ``error.alpha`` feeds only
+    #: jnp arithmetic (``ErrorModel.sigma``); ``mapping.on_off_ratio``
+    #: feeds ``g_min`` which the FPG ADC path consumes in *Python* math
+    #: (``math.floor`` range snapping) — hence the fpg exclusion below.
+    DYNAMIC_PATHS = ("error.alpha", "mapping.on_off_ratio")
+
+    def __init__(
+        self,
+        layers: Sequence[Tuple[jax.Array, jax.Array]],
+        xca: jax.Array,
+        xte: jax.Array,
+        yte: jax.Array,
+        *,
+        act_fn: Callable = jax.nn.relu,
+        version: str = "v1",
+    ):
+        self.layers = [(jnp.asarray(w), jnp.asarray(b)) for w, b in layers]
+        self.xca, self.xte, self.yte = (
+            jnp.asarray(xca), jnp.asarray(xte), jnp.asarray(yte))
+        self.act_fn = act_fn
+        h = hashlib.sha256()
+        for w, b in self.layers:
+            h.update(np.asarray(w).tobytes())
+            h.update(np.asarray(b).tobytes())
+        for a in (self.xca, self.xte, self.yte):
+            h.update(np.asarray(a).tobytes())
+        self._sig = f"classifier/{version}/{act_fn.__name__}/{h.hexdigest()[:16]}"
+        self._pm_cache: Dict[str, List[ProgrammedMatrix]] = {}
+        self._fn_cache: Dict[Tuple, Callable] = {}
+
+    # -- executor protocol -------------------------------------------------
+    def signature(self) -> str:
+        return self._sig
+
+    def dynamic_fields(self, spec: AnalogSpec) -> Dict[str, float]:
+        dyn: Dict[str, float] = {}
+        if spec.error.kind in ("state_independent", "state_proportional"):
+            dyn["error.alpha"] = float(spec.error.alpha)
+        if spec.adc.style != "fpg":
+            dyn["mapping.on_off_ratio"] = float(spec.mapping.on_off_ratio)
+        return dyn
+
+    def evaluate_group(
+        self,
+        template: AnalogSpec,
+        dyn_names: Tuple[str, ...],
+        dyn_rows: Sequence[Tuple[float, ...]],
+        trials: int,
+        seed: int,
+        test_n: Optional[int],
+        mesh=None,
+    ) -> List[List[float]]:
+        """Evaluate all design points of one compile group at once."""
+        dyn = jnp.asarray(np.asarray(dyn_rows, dtype=np.float32).reshape(
+            len(dyn_rows), len(dyn_names)))
+        keys = trial_keys(seed, trials)
+        dyn, keys = shard_point_trial_batch(dyn, keys, mesh)
+        fn = self._compiled(template, dyn_names, test_n)
+        accs = np.asarray(jax.block_until_ready(fn(dyn, keys)))
+        return [row.tolist() for row in accs]
+
+    # -- caches ------------------------------------------------------------
+    def _programmed(self, template: AnalogSpec) -> List[ProgrammedMatrix]:
+        """Programmed-weight cache keyed by (mapping signature, weights)."""
+        key = _mapping_signature(template)
+        if key not in self._pm_cache:
+            self._pm_cache[key] = [
+                program_codes(w, template) for w, _ in self.layers
+            ]
+        return self._pm_cache[key]
+
+    def _compiled(self, template: AnalogSpec, dyn_names: Tuple[str, ...],
+                  test_n: Optional[int]) -> Callable:
+        fkey = (repr(template), dyn_names, test_n)
+        if fkey in self._fn_cache:
+            return self._fn_cache[fkey]
+        pms = self._programmed(template)
+        xca, yte = self.xca, self.yte
+        xte = self.xte if test_n is None else self.xte[:test_n]
+        yt = yte if test_n is None else yte[:test_n]
+
+        def point_fn(dyn_vec, keys):
+            assigns = {nm: dyn_vec[j] for j, nm in enumerate(dyn_names)}
+            spec = materialize(template, assigns)
+
+            def one_trial(k):
+                return trial_accuracy(self.layers, spec, k, xca, xte, yt,
+                                      act_fn=self.act_fn, pms=pms)
+
+            return jax.vmap(one_trial)(keys)
+
+        fn = jax.jit(jax.vmap(point_fn, in_axes=(0, None)))
+        self._fn_cache[fkey] = fn
+        return fn
+
+
+def _to_py(v):
+    """JSON-able form of a metric value."""
+    if isinstance(v, dict):
+        return {k: _to_py(x) for k, x in v.items()}
+    if isinstance(v, (list, tuple)):
+        return [_to_py(x) for x in v]
+    if isinstance(v, (jax.Array, np.ndarray)):
+        arr = np.asarray(v)
+        return float(arr) if arr.ndim == 0 else arr.tolist()
+    if isinstance(v, (np.floating, np.integer)):
+        return float(v)
+    return v
+
+
+class FunctionEvaluator:
+    """Generic per-point metric for non-accuracy sweeps.
+
+    ``fn(spec)`` for deterministic metrics (conductance averages, energy
+    models); ``fn(spec, key)`` with ``takes_key=True`` for Monte-Carlo
+    metrics, in which case the per-trial keys are vmapped through one
+    jitted call (``vectorize=True``) instead of a Python trial loop.
+
+    ``data`` MUST name everything ``fn`` closes over that can change
+    between runs (weight matrices, calibration batches, model-fit
+    constants): it is hashed into the cache signature, and omitting it
+    lets the on-disk sweep cache serve results computed from stale
+    inputs.  Pass arrays directly — they are hashed by content.
+    """
+
+    def __init__(
+        self,
+        fn: Callable,
+        *,
+        name: str,
+        version: str = "v1",
+        takes_key: bool = False,
+        vectorize: bool = True,
+        data: Sequence[Any] = (),
+    ):
+        self.fn = fn
+        self.takes_key = takes_key
+        self.vectorize = vectorize
+        h = hashlib.sha256()
+        for item in data:
+            if isinstance(item, (jax.Array, np.ndarray)):
+                h.update(np.asarray(item).tobytes())
+            else:
+                h.update(repr(item).encode())
+        self._sig = f"function/{name}/{version}/{h.hexdigest()[:16]}"
+
+    def signature(self) -> str:
+        return self._sig
+
+    def dynamic_fields(self, spec: AnalogSpec) -> Dict[str, float]:
+        return {}
+
+    def evaluate_group(self, template, dyn_names, dyn_rows, trials, seed,
+                       test_n, mesh=None) -> List[List[Any]]:
+        assert not dyn_names
+        if not self.takes_key:
+            vals = [_to_py(self.fn(template))]
+        elif self.vectorize:
+            keys = trial_keys(seed, trials)
+            out = jax.jit(jax.vmap(lambda k: self.fn(template, k)))(keys)
+            vals = _to_py(out)
+        else:
+            root = jax.random.PRNGKey(seed)
+            vals = [_to_py(self.fn(template, jax.random.fold_in(root, t)))
+                    for t in range(trials)]
+        return [list(vals) for _ in dyn_rows]

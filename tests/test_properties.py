@@ -1,8 +1,14 @@
-"""Hypothesis property tests on the system's invariants."""
+"""Hypothesis property tests on the system's invariants.
+
+``hypothesis`` is a dev-only dependency (requirements-dev.txt); skip the
+module instead of aborting collection when it is absent."""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import adc as adc_lib

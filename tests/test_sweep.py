@@ -1,0 +1,284 @@
+"""Sweep-engine tests: grid expansion, compile-group batching, the
+vectorized-vs-serial equivalence contract, and cache resume.
+
+The equivalence tests are the acceptance gate for the engine: the same
+seeds must produce the same accuracies as the legacy per-point serial
+loop.  ADC-free paths are bit-exact; calibrated-ADC paths with traced
+dynamic scalars are allowed isolated ADC-rounding-boundary flips
+(DESIGN.md §Sweep-engine), bounded here to a few test samples."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.adc import ADCConfig
+from repro.core.analog import AnalogSpec, program, program_codes, program_from_codes
+from repro.core.errors import state_independent, state_proportional
+from repro.core.mapping import MappingConfig
+from repro.sweep import (
+    Axis,
+    ClassifierEvaluator,
+    FunctionEvaluator,
+    SweepSpec,
+    compile_groups,
+    point_key,
+    run_sweep,
+    serial_accuracy,
+)
+
+
+@pytest.fixture(scope="module")
+def vehicle():
+    """Tiny random classifier + splits (the pipeline, not the training)."""
+    ks = jax.random.split(jax.random.PRNGKey(0), 6)
+    dims = (16, 32, 8)
+    layers = [
+        (jax.random.normal(ks[i], (dims[i], dims[i + 1])) * dims[i] ** -0.5,
+         jnp.zeros((dims[i + 1],)))
+        for i in range(2)
+    ]
+    xca = jax.random.normal(ks[3], (64, 16))
+    xte = jax.random.normal(ks[4], (128, 16))
+    yte = jax.random.randint(ks[5], (128,), 0, 8)
+    return layers, xca, xte, yte
+
+
+def _evaluator(vehicle):
+    return ClassifierEvaluator(*vehicle)
+
+
+# ---------------------------------------------------------------------------
+# spec expansion
+# ---------------------------------------------------------------------------
+
+def test_expand_cartesian_and_zipped():
+    sweep = SweepSpec(
+        name="t",
+        base=AnalogSpec(adc=ADCConfig(style="none")),
+        axes=(
+            Axis(("mapping.scheme", "input_accum"),
+                 (("differential", "analog"), ("offset", "digital")),
+                 labels=("diff", "off")),
+            Axis("adc.bits", (6, 8)),
+        ),
+    )
+    pts = sweep.expand()
+    assert len(pts) == 4
+    assert [p.tag for p in pts] == ["diff_bits6", "diff_bits8",
+                                    "off_bits6", "off_bits8"]
+    assert pts[0].spec.mapping.scheme == "differential"
+    assert pts[0].spec.input_accum == "analog"
+    assert pts[2].spec.input_accum == "digital"
+    assert pts[3].spec.adc.bits == 8
+    assert pts[1].coord("adc.bits") == 8
+
+
+def test_expand_explicit_points():
+    sweep = SweepSpec.from_points(
+        "t", [("A", AnalogSpec()), ("B", AnalogSpec(max_rows=72))])
+    pts = sweep.expand()
+    assert [p.tag for p in pts] == ["A", "B"]
+    assert pts[1].spec.max_rows == 72
+
+
+# ---------------------------------------------------------------------------
+# compile-group batching
+# ---------------------------------------------------------------------------
+
+def test_alpha_grid_is_one_compile_group(vehicle):
+    ev = _evaluator(vehicle)
+    sweep = SweepSpec(
+        name="t",
+        base=AnalogSpec(adc=ADCConfig(style="none"),
+                        error=state_proportional(0.0)),
+        axes=(Axis("error.alpha", (0.01, 0.02, 0.05, 0.1)),),
+        trials=2,
+    )
+    pts = sweep.expand()
+    groups = compile_groups(
+        [(point_key(ev.signature(), p, sweep.point_protocol()), p)
+         for p in pts], ev)
+    assert len(groups) == 1
+    _, dyn_names, members = groups[0]
+    assert dyn_names == ("error.alpha",)
+    assert len(members) == 4
+
+
+def test_constant_dynamic_field_stays_static(vehicle):
+    """A field that does not vary must not be traced (bit-exactness)."""
+    ev = _evaluator(vehicle)
+    sweep = SweepSpec(
+        name="t",
+        base=AnalogSpec(adc=ADCConfig(style="none"),
+                        error=state_proportional(0.05)),
+        axes=(Axis("max_rows", (72, 1152)),),
+        trials=1,
+    )
+    pts = sweep.expand()
+    groups = compile_groups(
+        [(point_key(ev.signature(), p, sweep.point_protocol()), p)
+         for p in pts], ev)
+    assert len(groups) == 2           # max_rows is static: separate shapes
+    for _, dyn_names, _ in groups:
+        assert dyn_names == ()        # alpha/on_off constant -> not dynamic
+
+
+# ---------------------------------------------------------------------------
+# vectorized == serial
+# ---------------------------------------------------------------------------
+
+def test_vectorized_matches_serial_bitexact_no_adc(vehicle):
+    layers, xca, xte, yte = vehicle
+    sweep = SweepSpec(
+        name="t",
+        base=AnalogSpec(
+            mapping=MappingConfig(scheme="differential"),
+            adc=ADCConfig(style="none"),
+            error=state_proportional(0.0),
+            input_accum="analog",
+        ),
+        axes=(
+            Axis("error.alpha", (0.02, 0.1)),
+            Axis("mapping.on_off_ratio", (100.0, float("inf"))),
+        ),
+        trials=3,
+        seed=7,
+    )
+    res = run_sweep(sweep, _evaluator(vehicle))
+    pts = sweep.expand()
+    assert len(res) == 4
+    for r in res:
+        _, _, accs = serial_accuracy(
+            layers, pts[r.index].spec, xca, xte, yte, trials=3, seed=7)
+        np.testing.assert_array_equal(np.asarray(r.values), np.asarray(accs))
+
+
+def test_vectorized_matches_serial_calibrated_adc(vehicle):
+    layers, xca, xte, yte = vehicle
+    sweep = SweepSpec(
+        name="t",
+        base=AnalogSpec(
+            mapping=MappingConfig(scheme="offset", bits_per_cell=2,
+                                  on_off_ratio=1e4),
+            adc=ADCConfig(style="calibrated", bits=8),
+            error=state_independent(0.0),
+            input_accum="digital",
+            max_rows=72,
+        ),
+        axes=(Axis("error.alpha", (0.01, 0.05)),),
+        trials=2,
+        seed=7,
+    )
+    res = run_sweep(sweep, _evaluator(vehicle))
+    pts = sweep.expand()
+    # traced-alpha batching may flip isolated ADC rounding boundaries:
+    # allow up to 2 of 128 test samples per trial, no more.
+    tol = 2.0 / xte.shape[0] + 1e-9
+    for r in res:
+        _, _, accs = serial_accuracy(
+            layers, pts[r.index].spec, xca, xte, yte, trials=2, seed=7)
+        np.testing.assert_allclose(np.asarray(r.values), np.asarray(accs),
+                                   atol=tol)
+
+
+def test_program_split_is_identity(vehicle):
+    layers, _, _, _ = vehicle
+    w = layers[0][0]
+    spec = AnalogSpec(
+        mapping=MappingConfig(scheme="differential", bits_per_cell=2,
+                              on_off_ratio=1e3),
+        error=state_proportional(0.05),
+    )
+    key = jax.random.PRNGKey(3)
+    direct = program(w, spec, key)
+    split = program_from_codes(program_codes(w, spec), spec, key)
+    np.testing.assert_array_equal(np.asarray(direct.g_pos),
+                                  np.asarray(split.g_pos))
+    np.testing.assert_array_equal(np.asarray(direct.g_neg),
+                                  np.asarray(split.g_neg))
+
+
+# ---------------------------------------------------------------------------
+# cache resume
+# ---------------------------------------------------------------------------
+
+class _CountingEvaluator:
+    """Delegates to a real evaluator, counting group evaluations."""
+
+    def __init__(self, inner):
+        self.inner = inner
+        self.calls = 0
+
+    def signature(self):
+        return self.inner.signature()
+
+    def dynamic_fields(self, spec):
+        return self.inner.dynamic_fields(spec)
+
+    def evaluate_group(self, *a, **kw):
+        self.calls += 1
+        return self.inner.evaluate_group(*a, **kw)
+
+
+def _cache_sweep():
+    return SweepSpec(
+        name="cache_t",
+        base=AnalogSpec(adc=ADCConfig(style="none"),
+                        error=state_proportional(0.0)),
+        axes=(Axis("error.alpha", (0.02, 0.1)),),
+        trials=2,
+    )
+
+
+def test_resume_from_cache(vehicle, tmp_path):
+    ev = _CountingEvaluator(_evaluator(vehicle))
+    res1 = run_sweep(_cache_sweep(), ev, cache_dir=str(tmp_path))
+    assert ev.calls == 1
+    assert res1.n_cached == 0
+    assert (tmp_path / "sweeps" / "cache_t.json").exists()
+
+    # same sweep, fresh run: everything served from disk
+    res2 = run_sweep(_cache_sweep(), ev, cache_dir=str(tmp_path))
+    assert ev.calls == 1              # no new group evaluations
+    assert res2.n_cached == 2
+    for r1, r2 in zip(res1, res2):
+        assert r1.values == r2.values
+        assert r1.tag == r2.tag
+
+    # widened grid: only the new point runs
+    wider = dataclasses.replace(
+        _cache_sweep(), axes=(Axis("error.alpha", (0.02, 0.1, 0.2)),))
+    res3 = run_sweep(wider, ev, cache_dir=str(tmp_path))
+    assert ev.calls == 2
+    assert res3.n_cached == 2
+    assert len(res3) == 3
+
+    # force recomputes everything and agrees with the cached values
+    res4 = run_sweep(_cache_sweep(), ev, cache_dir=str(tmp_path), force=True)
+    assert ev.calls == 3
+    for r1, r4 in zip(res1, res4):
+        assert r1.values == r4.values
+
+
+def test_function_evaluator_vmapped_trials(tmp_path):
+    def probe(spec, key):
+        return jax.random.normal(key, ()) * 0.0 + spec.mapping.g_min
+
+    sweep = SweepSpec(
+        name="fn_t",
+        base=AnalogSpec(),
+        axes=(Axis("mapping.on_off_ratio", (10.0, 100.0)),),
+        trials=3,
+    )
+    ev = FunctionEvaluator(probe, name="probe", takes_key=True)
+    res = run_sweep(sweep, ev, cache_dir=str(tmp_path))
+    assert len(res) == 2
+    assert res["on_off_ratio10"].values == pytest.approx([0.1] * 3)
+    assert res["on_off_ratio100"].values == pytest.approx([0.01] * 3)
+    # resume: no recomputation, same values
+    res2 = run_sweep(sweep, ev, cache_dir=str(tmp_path))
+    assert res2.n_cached == 2
+    assert res2["on_off_ratio10"].values == res["on_off_ratio10"].values
