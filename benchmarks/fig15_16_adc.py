@@ -34,13 +34,9 @@ SCHEME_AXIS = Axis(
 )
 
 
-def main(timer: Timer):
-    params = train_mlp()
-    base = digital_accuracy(params)
-    emit("fig15_digital_baseline", 0.0, f"acc={base:.4f}")
-
-    # --- Fig. 15: ADC bits sweep (calibrated ranges) ----------------------
-    fig15 = SweepSpec(
+def fig15_sweep() -> SweepSpec:
+    """Fig. 15: ADC bits sweep (calibrated ranges)."""
+    return SweepSpec(
         name="fig15",
         base=AnalogSpec(
             mapping=MappingConfig(bits_per_cell=None),
@@ -54,7 +50,32 @@ def main(timer: Timer):
         ),
         trials=1,   # ADC is deterministic
     )
-    emit_sweep("fig15", run_bench_sweep(fig15),
+
+
+def fig16_sweep() -> SweepSpec:
+    """Fig. 16: fixed 8-bit calibrated ADC, sweep rows x bits/cell."""
+    return SweepSpec(
+        name="fig16",
+        base=AnalogSpec(
+            adc=ADCConfig(style="calibrated", bits=8),
+        ),
+        axes=(
+            SCHEME_AXIS,
+            Axis("mapping.bits_per_cell", (2, None),
+                 labels=("bpc2", "bpcNone")),
+            Axis("max_rows", (72, 144, 1152),
+                 labels=tuple(f"rows{r}" for r in (72, 144, 1152))),
+        ),
+        trials=1,
+    )
+
+
+def main(timer: Timer):
+    params = train_mlp()
+    base = digital_accuracy(params)
+    emit("fig15_digital_baseline", 0.0, f"acc={base:.4f}")
+
+    emit_sweep("fig15", run_bench_sweep(fig15_sweep()),
                fmt=lambda r: f"acc={r.mean:.4f}")
 
     # uncalibrated reference: Eq. (4)'s Full Precision Guarantee resolution
@@ -69,21 +90,6 @@ def main(timer: Timer):
              f"B_out={spec_full.fpg_adc_bits(256)} "
              f"(vs 8b calibrated sufficing)")
 
-    # --- Fig. 16: fixed 8-bit calibrated ADC, sweep rows x bits/cell ------
-    fig16 = SweepSpec(
-        name="fig16",
-        base=AnalogSpec(
-            adc=ADCConfig(style="calibrated", bits=8),
-        ),
-        axes=(
-            SCHEME_AXIS,
-            Axis("mapping.bits_per_cell", (2, None),
-                 labels=("bpc2", "bpcNone")),
-            Axis("max_rows", (72, 144, 1152),
-                 labels=tuple(f"rows{r}" for r in (72, 144, 1152))),
-        ),
-        trials=1,
-    )
-    res16 = run_bench_sweep(fig16)
+    res16 = run_bench_sweep(fig16_sweep())
     emit_sweep("fig16", res16,
                fmt=lambda r: f"acc={r.mean:.4f} (drop={base - r.mean:+.4f})")

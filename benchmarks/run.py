@@ -2,11 +2,15 @@
 
 Prints ``name,us_per_call,derived`` CSV rows.  Usage::
 
-    PYTHONPATH=src python -m benchmarks.run [--only fig8_9] [--smoke]
+    PYTHONPATH=src python -m benchmarks.run [module ...] [--only fig8_9] [--smoke]
 
-``--smoke`` is the CI fast path: one benchmark (Fig. 10's On/Off sweep —
-a single compile group exercising the whole vectorized engine), one
-programming trial per point, fresh (uncached) evaluation.
+Positional ``module`` names (substring match, like ``--only``) restrict
+the run, e.g. ``python -m benchmarks.run lm_accuracy --smoke``.
+
+``--smoke`` is the CI fast path: the Fig. 10 On/Off sweep (a single
+compile group exercising the whole vectorized engine) plus the LM
+serving sweep (``lm_accuracy`` — program → calibrate → serve end to
+end), one programming trial per point, fresh (uncached) evaluation.
 """
 
 import argparse
@@ -24,33 +28,47 @@ MODULES = [
     "fig19_parasitics",
     "table3_energy",
     "table4_sonos",
+    "lm_accuracy",
     "kernelbench",
     "roofline",
 ]
 
-SMOKE_MODULES = ["fig10_onoff"]
+SMOKE_MODULES = ["fig10_onoff", "lm_accuracy"]
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
+    ap.add_argument("modules", nargs="*", default=[],
+                    help="restrict to modules matching any of these "
+                         "substrings (e.g. lm_accuracy)")
     ap.add_argument("--only", default=None)
     ap.add_argument("--smoke", action="store_true",
-                    help="CI fast path: one sweep, one trial per point")
+                    help="CI fast path: thinned sweeps, one trial per point")
     args = ap.parse_args()
 
     from benchmarks import common
     from benchmarks.common import Timer, emit
 
+    common.SMOKE = args.smoke
+    # --smoke alone runs the CI subset; an explicit selection (positional
+    # or --only) picks from ALL modules, with --smoke just thinning the
+    # sweeps — so `run.py fig8_9 --smoke` means the fig8_9 smoke grid.
     modules = MODULES
-    if args.smoke:
-        common.SMOKE = True
+    if args.smoke and not (args.modules or args.only):
         modules = SMOKE_MODULES
+    selected = [
+        m for m in modules
+        if (not args.only or args.only in m)
+        and (not args.modules or any(s in m for s in args.modules))
+    ]
+    if not selected:
+        ap.error(f"no benchmark matches {args.modules or [args.only]}; "
+                 f"choose from {', '.join(MODULES)}")
 
+    failed = []
     timer = Timer(reps=3)
     print("name,us_per_call,derived")
-    for mod_name in modules:
-        if args.only and args.only not in mod_name:
-            continue
+    for mod_name in selected:
         t0 = time.time()
         if mod_name == "roofline":
             # roofline reads the dry-run results, no model eval
@@ -73,7 +91,13 @@ def main() -> None:
             mod.main(timer)
         except Exception as e:  # keep the harness running
             emit(f"{mod_name}_ERROR", 0.0, repr(e)[:200])
+            failed.append(mod_name)
         print(f"# {mod_name} done in {time.time()-t0:.1f}s", file=sys.stderr)
+
+    if failed:
+        # every other module still ran, but CI must see the breakage
+        print(f"# FAILED: {', '.join(failed)}", file=sys.stderr)
+        sys.exit(1)
 
 
 if __name__ == "__main__":

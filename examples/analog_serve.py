@@ -7,13 +7,14 @@ Run: PYTHONPATH=src python examples/analog_serve.py
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import get_smoke_config
 from repro.core import analog as A
 from repro.core import errors as E
 from repro.data.synthetic import SyntheticLM
-from repro.models.registry import get_model
-from repro.serve.analog_engine import analog_eval_loss, calibrate_lm, program_lm
+from repro.serve.analog_engine import (
+    analog_eval_loss, calibrate_lm, decode_lm, program_lm)
 from repro.train.step import make_train_state, train_step_fn
 
 
@@ -42,22 +43,17 @@ def main():
                                     batch["tokens"], batch["targets"]))
         print(f"{name:42s} analog loss {al:.4f} (delta {al-dig:+.4f})")
 
-    # greedy generation through the analog path
-    api = get_model(cfg)
+    # batched greedy serving through the analog path: one prefill + a
+    # scanned decode loop per request batch (repro.serve.decode_lm)
     pack = program_lm(cfg, state.params, A.design_a(error=E.sonos()),
                       jax.random.PRNGKey(7))
     pack = calibrate_lm(cfg, state.params, pack, ds.batch(499)["tokens"])
-    prompt = batch["tokens"][:1, :8]
-    logits, cache = api.prefill(cfg, state.params, prompt, max_len=32,
-                                pack=pack)
-    toks = []
-    tok = jnp.argmax(logits, -1).astype(jnp.int32)
-    for _ in range(8):
-        toks.append(int(tok[0, 0]))
-        logits, cache = api.decode_step(cfg, state.params, tok, cache,
-                                        pack=pack)
-        tok = jnp.argmax(logits, -1).astype(jnp.int32)
-    print("analog greedy continuation:", toks)
+    prompts = batch["tokens"][:4, :8]
+    analog_toks = decode_lm(cfg, state.params, prompts, 8, pack=pack)
+    digital_toks = decode_lm(cfg, state.params, prompts, 8, pack=None)
+    match = float(jnp.mean((analog_toks == digital_toks).astype(jnp.float32)))
+    print("analog greedy continuations:", np.asarray(analog_toks).tolist())
+    print(f"agreement with digital serving: {match:.0%}")
 
 
 if __name__ == "__main__":

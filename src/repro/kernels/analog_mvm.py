@@ -30,7 +30,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.compat import COMPILER_PARAMS
 
 
 def _adc_epilogue(v, lo, hi, bits: int):
@@ -104,7 +105,8 @@ def _common_call(kernel, x_parts, g_pos, g_neg, adc_lo, adc_hi, *,
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, p_: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
-        compiler_params=pltpu.CompilerParams(dimension_semantics=("parallel", "parallel", "arbitrary")),
+        compiler_params=COMPILER_PARAMS(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x_parts, g_pos, g_neg, lo2, hi2)
 

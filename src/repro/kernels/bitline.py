@@ -20,7 +20,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.compat import COMPILER_PARAMS
 
 
 def _bitline_kernel(g_ref, x_ref, o_ref, *, r_hat: float, k: int):
@@ -74,6 +75,7 @@ def bitline_mvm_pallas(
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
-        compiler_params=pltpu.CompilerParams(dimension_semantics=("parallel", "parallel")),
+        compiler_params=COMPILER_PARAMS(
+            dimension_semantics=("parallel", "parallel")),
         interpret=interpret,
     )(g, x)

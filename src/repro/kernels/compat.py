@@ -1,0 +1,13 @@
+"""Pallas API compatibility across jax releases.
+
+jax renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams``;
+resolve whichever this installation provides so the interpret-mode CPU
+path (and Mosaic on TPU) runs on either side of the rename.
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+COMPILER_PARAMS = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams")

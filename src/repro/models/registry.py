@@ -16,6 +16,10 @@ class ModelApi:
     prefill: Callable          # (cfg, params, tokens, max_len, **kw)
     decode_step: Callable      # (cfg, params, token, cache, **kw)
     init_cache: Callable       # (cfg, batch, max_len)
+    # batched greedy serving loop: (cfg, params, prompts, n_new, **kw)
+    # -> (B, n_new) tokens; None for families without one (encoder-decoder
+    # needs per-utterance encoder state, see repro.models.encdec)
+    decode_loop: Optional[Callable] = None
 
 
 _TRANSFORMER = ModelApi(
@@ -24,6 +28,7 @@ _TRANSFORMER = ModelApi(
     prefill=transformer.prefill,
     decode_step=transformer.decode_step,
     init_cache=transformer.init_cache,
+    decode_loop=transformer.greedy_decode,
 )
 
 _HYBRID = ModelApi(

@@ -322,6 +322,40 @@ def decode_step(
     return logits, {"layers": new_cache, "len": t + 1}
 
 
+def greedy_decode(
+    cfg: ModelConfig,
+    params: dict,
+    prompts: jax.Array,                # (B, S) int32
+    n_new: int,
+    *,
+    prefix_embeds: Optional[jax.Array] = None,
+    pack: Optional[AnalogPack] = None,
+) -> jax.Array:
+    """Batched greedy generation: one prefill, then scanned decode steps.
+
+    The decode loop is a ``lax.scan`` over :func:`decode_step` (cache as
+    carry), so the whole multi-request serving path — analog pack
+    included — lowers to a single compiled program.  Returns the
+    (B, n_new) generated tokens.
+    """
+    assert n_new >= 1, n_new
+    b, s = prompts.shape
+    # the first generated token comes from the prefill logits, so only
+    # n_new - 1 decode steps (and cache slots) are needed
+    logits, cache = prefill(cfg, params, prompts, s + n_new - 1,
+                            prefix_embeds=prefix_embeds, pack=pack)
+    tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)   # (B,)
+
+    def body(carry, _):
+        t, c = carry
+        lg, c = decode_step(cfg, params, t[:, None], c, pack=pack)
+        nxt = jnp.argmax(lg[:, -1], axis=-1).astype(jnp.int32)
+        return (nxt, c), nxt
+
+    _, toks = lax.scan(body, (tok, cache), None, length=n_new - 1)
+    return jnp.concatenate([tok[:, None], jnp.swapaxes(toks, 0, 1)], axis=1)
+
+
 # ---------------------------------------------------------------------------
 
 

@@ -5,7 +5,9 @@ Pipeline (paper Sec. 4):
 
 1. ``program_lm``    — every weight-stationary projection of every layer is
    quantized, mapped (per the AnalogSpec), and perturbed with program-time
-   cell errors.  Per-layer PRNG keys are folded from the layer index.
+   cell errors.  PRNG keys are folded from a *stable hash of the hook
+   name* (then the layer index), so a projection's programming noise never
+   depends on which other projections exist or on dict-iteration order.
 2. ``calibrate_lm``  — two collect passes over a calibration batch:
    phase 1 records per-layer activation ranges (L1-optimal clip of the
    matmul *inputs*, Sec. 4.3); phase 2 re-runs with those clips installed
@@ -13,7 +15,18 @@ Pipeline (paper Sec. 4):
    (Sec. 6.2), power-of-two constrained for sliced mappings.
 3. ``analog pack`` feeds ``repro.models.transformer`` forward/prefill/
    decode — the same scanned model body, conductances scanned alongside
-   parameters.
+   parameters.  ``decode_lm`` is the batched multi-request serving entry
+   (prefill + scanned greedy decode through the pack).
+
+Programming is split like ``core.analog.program``:
+``lm_program_codes`` (quantize + integer code mapping — deterministic,
+independent of the trial key, the error magnitude, and the On/Off ratio)
+and ``program_lm_from_codes`` (conductance-convert + perturb, tracer-safe
+in ``error.alpha`` / ``mapping.on_off_ratio``).  The sweep engine
+(``repro.sweep.ServeEvaluator``) caches the codes per
+``(mapping signature, params hash)`` and vmaps the second half over trial
+keys; ``program_lm`` composes the two halves, so the eager path and the
+vectorized path draw identical programming noise by construction.
 
 Scope: the dense/vlm/ssm(rwkv) transformer family (the paper's technique
 targets weight-stationary MVMs; see DESIGN.md §Arch-applicability for the
@@ -23,6 +36,7 @@ MoE-expert / recurrence caveats).
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 from typing import Dict, Optional, Tuple
 
 import jax
@@ -30,7 +44,14 @@ import jax.numpy as jnp
 
 from repro.config import ModelConfig
 from repro.core import calibrate as cal
-from repro.core.analog import AnalogSpec, AnalogWeights, program
+from repro.core.analog import (
+    AnalogSpec,
+    AnalogWeights,
+    ProgrammedMatrix,
+    program,
+    program_codes,
+    program_from_codes,
+)
 from repro.core.quant import calibrate_act_range
 from repro.models.registry import get_model
 from repro.models.transformer import AnalogPack, cast_params, forward
@@ -55,35 +76,75 @@ HOOK_NAME = {
     ("rwkv", "cv"): "rwkv_cv", ("rwkv", "cr"): "rwkv_cr",
 }
 
+#: the lm_head / tied-embedding projection in an ``lm_program_codes`` dict
+HEAD = "head"
 
-def _program_stack(w_stack: jax.Array, spec: AnalogSpec,
-                   key: jax.Array) -> AnalogWeights:
-    """vmap ``program`` over the layer axis of (L, K, N)."""
-    l = w_stack.shape[0]
+
+def hook_key(key: jax.Array, name: str) -> jax.Array:
+    """Fold a hook's programming key from a stable hash of its name.
+
+    A running counter would tie keys to dict-iteration order, silently
+    reshuffling every layer's programming noise whenever a projection is
+    added or removed (pinned by ``tests/test_serve_engine.py``).
+    """
+    h = hashlib.blake2s(name.encode(), digest_size=4).digest()
+    return jax.random.fold_in(key, int.from_bytes(h, "big") & 0x7FFFFFFF)
+
+
+def _program_stack_from_codes(pm: ProgrammedMatrix, spec: AnalogSpec,
+                              key: jax.Array) -> AnalogWeights:
+    """vmap ``program_from_codes`` over the layer axis of a code stack."""
+    l = pm.codes.c_pos.shape[0]
     keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(jnp.arange(l))
-    return jax.vmap(lambda w, k: program(w, spec, k))(w_stack, keys)
+    return jax.vmap(lambda c, k: program_from_codes(c, spec, k))(pm, keys)
 
 
-def program_lm(cfg: ModelConfig, params: dict, spec: AnalogSpec,
-               key: jax.Array, *, include_head: bool = True) -> AnalogPack:
+def lm_program_codes(cfg: ModelConfig, params: dict, spec: AnalogSpec,
+                     *, include_head: bool = True,
+                     ) -> Dict[str, ProgrammedMatrix]:
+    """Quantize + map every analog hook of the LM to integer code stacks.
+
+    The deterministic half of :func:`program_lm`: independent of the
+    programming key, ``error.alpha``, and ``on_off_ratio``, hence cacheable
+    per ``(mapping signature, params hash)`` across trials and design
+    points (see ``repro.sweep.serve_eval``).  Layer hooks carry codes
+    stacked over layers; the head (``HEAD``) is a plain 2-D matrix.
+    """
     groups = RWKV_NAMES if cfg.rwkv else DENSE_NAMES
-    layer_weights: Dict[str, AnalogWeights] = {}
+    codes: Dict[str, ProgrammedMatrix] = {}
     cp = params["layers"]
-    i = 0
     for parent, leaves in groups.items():
         for leaf in leaves:
             if parent not in cp or leaf not in cp[parent]:
                 continue
             name = HOOK_NAME[(parent, leaf)]
-            layer_weights[name] = _program_stack(
-                cp[parent][leaf].astype(jnp.float32), spec,
-                jax.random.fold_in(key, i))
-            i += 1
-    head = None
+            w_stack = cp[parent][leaf].astype(jnp.float32)
+            codes[name] = jax.vmap(lambda w: program_codes(w, spec))(w_stack)
     if include_head:
         w = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
-        head = program(w.astype(jnp.float32), spec,
-                       jax.random.fold_in(key, 10_000))
+        codes[HEAD] = program_codes(w.astype(jnp.float32), spec)
+    return codes
+
+
+def program_lm_from_codes(cfg: ModelConfig,
+                          codes: Dict[str, ProgrammedMatrix],
+                          spec: AnalogSpec, key: jax.Array) -> AnalogPack:
+    """Conductance-convert + perturb cached code stacks into a pack.
+
+    The per-trial half of :func:`program_lm`: tracer-safe in
+    ``spec.error.alpha`` / ``spec.mapping.on_off_ratio``, so the sweep
+    engine vmaps it over trial keys and batches design points through one
+    compilation.  Key schedule: ``fold_in(hook_key(key, name), layer)``.
+    """
+    layer_weights: Dict[str, AnalogWeights] = {}
+    for name, pm in codes.items():
+        if name == HEAD:
+            continue
+        layer_weights[name] = _program_stack_from_codes(
+            pm, spec, hook_key(key, name))
+    head = None
+    if HEAD in codes:
+        head = program_from_codes(codes[HEAD], spec, hook_key(key, HEAD))
     s = spec.mapping.n_slices
     l = cfg.n_layers
     zeros = {n: jnp.zeros((l, s)) for n in layer_weights}
@@ -94,6 +155,13 @@ def program_lm(cfg: ModelConfig, params: dict, spec: AnalogSpec,
         head_lo=jnp.zeros((s,)), head_hi=jnp.ones((s,)),
         head_act=None, collect=False,
     )
+
+
+def program_lm(cfg: ModelConfig, params: dict, spec: AnalogSpec,
+               key: jax.Array, *, include_head: bool = True) -> AnalogPack:
+    """Program the LM's weight-stationary projections onto analog arrays."""
+    codes = lm_program_codes(cfg, params, spec, include_head=include_head)
+    return program_lm_from_codes(cfg, codes, spec, key)
 
 
 def calibrate_lm(cfg: ModelConfig, params: dict, pack: AnalogPack,
@@ -145,10 +213,38 @@ def calibrate_lm(cfg: ModelConfig, params: dict, pack: AnalogPack,
     )
 
 
-def analog_eval_loss(cfg: ModelConfig, params: dict, pack: AnalogPack,
-                     tokens: jax.Array, targets: jax.Array) -> jax.Array:
-    """Cross-entropy of the analog model (accuracy metric for sweeps)."""
+def analog_eval_metrics(cfg: ModelConfig, params: dict, pack: AnalogPack,
+                        tokens: jax.Array, targets: jax.Array,
+                        ) -> Dict[str, jax.Array]:
+    """Teacher-forced serving metrics of the analog model.
+
+    Returns ``{"loss": cross-entropy, "top1": next-token accuracy}`` —
+    the per-design-point metrics of the LM accuracy sweeps.
+    """
     logits, _ = forward(cfg, params, tokens, pack=pack, remat=False)
     logz = jax.nn.logsumexp(logits, axis=-1)
     gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
-    return jnp.mean(logz - gold)
+    top1 = jnp.mean((jnp.argmax(logits, axis=-1) == targets)
+                    .astype(jnp.float32))
+    return {"loss": jnp.mean(logz - gold), "top1": top1}
+
+
+def analog_eval_loss(cfg: ModelConfig, params: dict, pack: AnalogPack,
+                     tokens: jax.Array, targets: jax.Array) -> jax.Array:
+    """Cross-entropy of the analog model (accuracy metric for sweeps)."""
+    return analog_eval_metrics(cfg, params, pack, tokens, targets)["loss"]
+
+
+def decode_lm(cfg: ModelConfig, params: dict, prompts: jax.Array,
+              n_new: int, *, pack: Optional[AnalogPack] = None) -> jax.Array:
+    """Batched multi-request greedy serving: prefill + scanned decode.
+
+    ``prompts``: (B, S) int32 prompt batch.  Returns (B, n_new) generated
+    tokens, every matmul routed through the analog pack when one is given
+    — the serving configuration (KV-cached decode, not teacher forcing)
+    the LM sweeps measure via ``decode_match``.
+    """
+    api = get_model(cfg)
+    assert api.decode_loop is not None, (
+        f"family {cfg.family!r} has no batched decode loop")
+    return api.decode_loop(cfg, params, prompts, n_new, pack=pack)

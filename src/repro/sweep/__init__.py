@@ -21,6 +21,7 @@ from repro.sweep.dispatch import shard_leading, sweep_mesh
 from repro.sweep.evaluate import (
     ClassifierEvaluator,
     FunctionEvaluator,
+    mapping_signature,
     materialize,
     serial_accuracy,
     trial_accuracy,
@@ -28,6 +29,7 @@ from repro.sweep.evaluate import (
 )
 from repro.sweep.executor import compile_groups, run_sweep
 from repro.sweep.results import PointResult, SweepCache, SweepResults, point_key
+from repro.sweep.serve_eval import ServeEvaluator, serve_serial_reference
 from repro.sweep.spec import Axis, DesignPoint, SweepSpec, get_field, set_field
 
 __all__ = [
@@ -36,15 +38,18 @@ __all__ = [
     "DesignPoint",
     "FunctionEvaluator",
     "PointResult",
+    "ServeEvaluator",
     "SweepCache",
     "SweepResults",
     "SweepSpec",
     "compile_groups",
     "get_field",
+    "mapping_signature",
     "materialize",
     "point_key",
     "run_sweep",
     "serial_accuracy",
+    "serve_serial_reference",
     "set_field",
     "shard_leading",
     "sweep_mesh",

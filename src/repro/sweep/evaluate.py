@@ -135,8 +135,13 @@ def serial_accuracy(
     return float(np.mean(accs)), float(np.std(accs)), accs
 
 
-def _mapping_signature(spec: AnalogSpec) -> str:
-    """The fields :func:`program_codes` depends on (g_min-independent)."""
+def mapping_signature(spec: AnalogSpec) -> str:
+    """The fields :func:`program_codes` depends on (g_min-independent).
+
+    Shared key of the programmed-codes caches: per-network code stacks are
+    identical across all design points agreeing on these fields
+    (``ClassifierEvaluator._programmed``, ``ServeEvaluator`` pack cache).
+    """
     m = spec.mapping
     return f"{m.scheme}|{m.weight_bits}|{m.bits_per_cell}|{m.unit_column}"
 
@@ -213,7 +218,7 @@ class ClassifierEvaluator:
     # -- caches ------------------------------------------------------------
     def _programmed(self, template: AnalogSpec) -> List[ProgrammedMatrix]:
         """Programmed-weight cache keyed by (mapping signature, weights)."""
-        key = _mapping_signature(template)
+        key = mapping_signature(template)
         if key not in self._pm_cache:
             self._pm_cache[key] = [
                 program_codes(w, template) for w, _ in self.layers

@@ -72,6 +72,24 @@ class PointResult:
             cached=cached,
         )
 
+    def metric_mean(self, key: str) -> float:
+        """Mean of one named metric over dict-valued trials.
+
+        Evaluators with non-scalar per-trial state (``ServeEvaluator``:
+        loss / top1 / decode_match per trial) store one dict per trial in
+        ``values``; ``mean``/``std`` stay None and aggregation goes
+        through here.
+        """
+        vals = [v[key] for v in self.values if isinstance(v, dict)]
+        assert vals, f"{self.tag} has no dict-valued trials with {key!r}"
+        return sum(float(v) for v in vals) / len(vals)
+
+    def metric_std(self, key: str) -> float:
+        vals = [float(v[key]) for v in self.values if isinstance(v, dict)]
+        assert vals, f"{self.tag} has no dict-valued trials with {key!r}"
+        mean = sum(vals) / len(vals)
+        return math.sqrt(sum((v - mean) ** 2 for v in vals) / len(vals))
+
     def to_json(self) -> dict:
         return dataclasses.asdict(self)
 
@@ -101,6 +119,10 @@ class SweepResults:
         r = self[tag]
         assert r.mean is not None, f"{tag} has non-scalar values"
         return r.mean
+
+    def metric(self, tag: str, key: str) -> float:
+        """Trial-mean of one named metric of a dict-valued point."""
+        return self[tag].metric_mean(key)
 
     def value(self, tag: str):
         return self[tag].values[0]

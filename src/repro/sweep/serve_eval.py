@@ -1,0 +1,246 @@
+"""The LM serving evaluator: program → calibrate → serve, per design point.
+
+The classifier vehicle (``evaluate.ClassifierEvaluator``) exercises the
+analog pipeline on a 4-layer MLP; this module is the same executor
+protocol at the paper's actual experiment scale — a *full trained LM*
+served through ``repro.serve.analog_engine``.  Per (design point, trial):
+
+1. **program**  — ``program_lm_from_codes`` perturbs cached integer code
+   stacks with trial-keyed cell errors.  The deterministic half
+   (``lm_program_codes``: quantize + map every hook of the network) is
+   cached per ``(mapping signature, params hash)`` — the LM-scale
+   analogue of ``ClassifierEvaluator``'s programmed-codes cache, except
+   the cached object is a whole pack of layer-stacked code matrices.
+2. **calibrate** — the two collect passes of ``calibrate_lm`` (activation
+   clips, then per-(layer, slice) ADC ranges), inside the trace.
+3. **evaluate** — teacher-forced cross-entropy + top-1 next-token
+   accuracy on held-out tokens, plus (optionally) ``decode_match``: the
+   fraction of greedy KV-cached decode tokens agreeing with the digital
+   model on a prompt batch — the serving configuration, not just
+   teacher forcing.
+
+Trials are vmapped over PRNG keys, design points over traced dynamic
+scalars (``error.alpha``, ``mapping.on_off_ratio``), and the point/trial
+batch shards over the 1-D ``data`` mesh — all through the same executor
+(``run_sweep``) and dispatch layer as every other sweep.
+
+:func:`serve_serial_reference` is the eager one-point-at-a-time loop the
+tier-2 differential suite (``tests/test_serve_sweep.py``) pins the
+vectorized path against: same key derivation
+(``fold_in(PRNGKey(seed), trial)`` then the stable per-hook name fold of
+``serve.analog_engine.hook_key``), same calibration placement.
+"""
+
+from __future__ import annotations
+
+import hashlib
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig
+from repro.core.analog import AnalogSpec
+from repro.serve.analog_engine import (
+    analog_eval_metrics,
+    calibrate_lm,
+    decode_lm,
+    lm_program_codes,
+    program_lm,
+    program_lm_from_codes,
+)
+from repro.sweep.dispatch import shard_point_trial_batch
+from repro.sweep.evaluate import mapping_signature, materialize, trial_keys
+
+
+def _hash_tree(h, tree) -> None:
+    """Fold a pytree of arrays into a hash, order-stable by path."""
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    for path, leaf in sorted(leaves, key=lambda kv: jax.tree_util.keystr(kv[0])):
+        h.update(jax.tree_util.keystr(path).encode())
+        h.update(np.asarray(leaf).tobytes())
+
+
+class ServeEvaluator:
+    """Vectorized end-to-end analog LM serving metrics for the executor.
+
+    One instance owns a trained LM (``cfg`` + ``params``), a calibration
+    token batch, and held-out eval tokens/targets; the executor hands it
+    compile groups and it returns per-(point, trial) metric dicts
+    (``loss``, ``top1``, and ``decode_match`` when ``prompts`` given)
+    from a single jitted, optionally mesh-sharded evaluation.
+
+    ``test_n`` (from the sweep protocol) subsamples eval *rows* —
+    the LM analogue of the classifier's test-subset trick.
+    """
+
+    #: same tracer-safety rules as ``ClassifierEvaluator`` (DESIGN.md
+    #: §Sweep-engine): ``error.alpha`` feeds only jnp arithmetic;
+    #: ``mapping.on_off_ratio`` is excluded under the FPG ADC whose range
+    #: snapping is Python math.
+    DYNAMIC_PATHS = ("error.alpha", "mapping.on_off_ratio")
+
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params: dict,
+        calib_tokens: jax.Array,
+        eval_tokens: jax.Array,
+        eval_targets: jax.Array,
+        *,
+        prompts: Optional[jax.Array] = None,
+        decode_new: int = 8,
+        include_head: bool = True,
+        version: str = "v1",
+    ):
+        self.cfg = cfg
+        self.params = params
+        self.calib_tokens = jnp.asarray(calib_tokens)
+        self.eval_tokens = jnp.asarray(eval_tokens)
+        self.eval_targets = jnp.asarray(eval_targets)
+        self.prompts = None if prompts is None else jnp.asarray(prompts)
+        self.decode_new = decode_new
+        self.include_head = include_head
+
+        h = hashlib.sha256()
+        h.update(repr(cfg).encode())
+        _hash_tree(h, params)
+        for a in (self.calib_tokens, self.eval_tokens, self.eval_targets):
+            h.update(np.asarray(a).tobytes())
+        if self.prompts is not None:
+            h.update(np.asarray(self.prompts).tobytes())
+            h.update(str(decode_new).encode())
+        h.update(str(include_head).encode())
+        self._sig = f"serve/{cfg.name}/{version}/{h.hexdigest()[:16]}"
+
+        # digital greedy reference for decode_match, computed once
+        self._digital_toks = None
+        if self.prompts is not None:
+            self._digital_toks = decode_lm(
+                cfg, params, self.prompts, decode_new, pack=None)
+
+        self._codes_cache: Dict[str, dict] = {}
+        self._fn_cache: Dict[Tuple, Any] = {}
+
+    # -- executor protocol -------------------------------------------------
+    def signature(self) -> str:
+        return self._sig
+
+    def dynamic_fields(self, spec: AnalogSpec) -> Dict[str, float]:
+        dyn: Dict[str, float] = {}
+        if spec.error.kind in ("state_independent", "state_proportional"):
+            dyn["error.alpha"] = float(spec.error.alpha)
+        if spec.adc.style != "fpg":
+            dyn["mapping.on_off_ratio"] = float(spec.mapping.on_off_ratio)
+        return dyn
+
+    def evaluate_group(
+        self,
+        template: AnalogSpec,
+        dyn_names: Tuple[str, ...],
+        dyn_rows: Sequence[Tuple[float, ...]],
+        trials: int,
+        seed: int,
+        test_n: Optional[int],
+        mesh=None,
+    ) -> List[List[Dict[str, float]]]:
+        """Evaluate all design points of one compile group at once."""
+        dyn = jnp.asarray(np.asarray(dyn_rows, dtype=np.float32).reshape(
+            len(dyn_rows), len(dyn_names)))
+        keys = trial_keys(seed, trials)
+        dyn, keys = shard_point_trial_batch(dyn, keys, mesh)
+        fn = self._compiled(template, dyn_names, test_n)
+        out = jax.block_until_ready(fn(dyn, keys))
+        out = {k: np.asarray(v) for k, v in out.items()}   # (points, trials)
+        return [
+            [{k: float(out[k][p, t]) for k in sorted(out)}
+             for t in range(trials)]
+            for p in range(len(dyn_rows))
+        ]
+
+    # -- caches ------------------------------------------------------------
+    def _codes(self, template: AnalogSpec) -> dict:
+        """Programmed-pack cache keyed by (mapping signature, params hash).
+
+        The params hash is carried by the evaluator signature (one
+        evaluator = one network), so the in-memory key is the mapping
+        signature alone — same structure as
+        ``ClassifierEvaluator._programmed``.
+        """
+        key = mapping_signature(template)
+        if key not in self._codes_cache:
+            self._codes_cache[key] = lm_program_codes(
+                self.cfg, self.params, template,
+                include_head=self.include_head)
+        return self._codes_cache[key]
+
+    def _compiled(self, template: AnalogSpec, dyn_names: Tuple[str, ...],
+                  test_n: Optional[int]):
+        fkey = (repr(template), dyn_names, test_n)
+        if fkey in self._fn_cache:
+            return self._fn_cache[fkey]
+        codes = self._codes(template)
+        tokens = self.eval_tokens if test_n is None else self.eval_tokens[:test_n]
+        targets = self.eval_targets if test_n is None else self.eval_targets[:test_n]
+
+        def point_fn(dyn_vec, keys):
+            assigns = {nm: dyn_vec[j] for j, nm in enumerate(dyn_names)}
+            spec = materialize(template, assigns)
+
+            def one_trial(k):
+                pack = program_lm_from_codes(self.cfg, codes, spec, k)
+                pack = calibrate_lm(self.cfg, self.params, pack,
+                                    self.calib_tokens)
+                m = analog_eval_metrics(self.cfg, self.params, pack,
+                                        tokens, targets)
+                if self.prompts is not None:
+                    toks = decode_lm(self.cfg, self.params, self.prompts,
+                                     self.decode_new, pack=pack)
+                    m["decode_match"] = jnp.mean(
+                        (toks == self._digital_toks).astype(jnp.float32))
+                return m
+
+            return jax.vmap(one_trial)(keys)
+
+        fn = jax.jit(jax.vmap(point_fn, in_axes=(0, None)))
+        self._fn_cache[fkey] = fn
+        return fn
+
+
+def serve_serial_reference(
+    cfg: ModelConfig,
+    params: dict,
+    spec: AnalogSpec,
+    calib_tokens: jax.Array,
+    eval_tokens: jax.Array,
+    eval_targets: jax.Array,
+    *,
+    prompts: Optional[jax.Array] = None,
+    decode_new: int = 8,
+    include_head: bool = True,
+    trials: int = 5,
+    seed: int = 1234,
+) -> List[Dict[str, float]]:
+    """One-point-at-a-time eager program → calibrate → eval reference.
+
+    The bit-faithful baseline the tier-2 differential suite pins
+    :class:`ServeEvaluator` against (same role ``serial_accuracy`` plays
+    for the classifier path).  Returns one metric dict per trial.
+    """
+    root = jax.random.PRNGKey(seed)
+    digital_toks = None
+    if prompts is not None:
+        digital_toks = decode_lm(cfg, params, prompts, decode_new, pack=None)
+    out: List[Dict[str, float]] = []
+    for t in range(trials):
+        key = jax.random.fold_in(root, t)
+        pack = program_lm(cfg, params, spec, key, include_head=include_head)
+        pack = calibrate_lm(cfg, params, pack, calib_tokens)
+        m = analog_eval_metrics(cfg, params, pack, eval_tokens, eval_targets)
+        if prompts is not None:
+            toks = decode_lm(cfg, params, prompts, decode_new, pack=pack)
+            m["decode_match"] = jnp.mean(
+                (toks == digital_toks).astype(jnp.float32))
+        out.append({k: float(v) for k, v in sorted(m.items())})
+    return out

@@ -1,0 +1,120 @@
+"""Golden-value regression tests: smoke-grid sweep outputs frozen as
+checked-in JSON, asserted bit-stable across refactors.
+
+The sweeps are the benchmark grids of ``fig8_9_cell_errors`` and
+``fig15_16_adc`` reduced to the smoke protocol (one programming trial per
+point), evaluated fresh (no on-disk cache) on the committed MLP vehicle
+(``benchmarks/_cache/mlp_0.npz``).  Every floating-point accuracy must
+match the golden file *exactly*: the engine is deterministic given
+(weights, seeds, platform, jax version), so any drift is a behaviour
+change — either a bug, or an intentional numerics change that must be
+made visible by regenerating the goldens.
+
+Update procedure (after an INTENTIONAL numerics change, with the reason
+in the commit message)::
+
+    PYTHONPATH=src python tests/test_goldens.py --regen
+
+Goldens live in ``tests/goldens/`` and are version-scoped: the file
+records the jax version it was generated under; a different installed
+major/minor jax version skips the exact comparison instead of failing
+(last-ULP float changes between jax releases are not our regressions).
+"""
+
+import dataclasses
+import json
+import os
+import sys
+
+import jax
+import pytest
+
+# the benchmark grids live in the top-level ``benchmarks`` package; make
+# it importable regardless of how this module was invoked (pytest from
+# the repo root, or ``python tests/test_goldens.py --regen``)
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if _REPO_ROOT not in sys.path:
+    sys.path.insert(0, _REPO_ROOT)
+
+from repro.sweep import run_sweep
+
+GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "goldens")
+
+
+def _smoke_sweeps():
+    """(name, SweepSpec) for every golden grid, at one trial per point."""
+    from benchmarks.fig8_9_cell_errors import (
+        ALPHAS_IND, ALPHAS_PROP, fig_sweep)
+    from benchmarks.fig15_16_adc import fig15_sweep, fig16_sweep
+    from repro.core.errors import state_independent, state_proportional
+
+    sweeps = [
+        fig_sweep("fig8", state_independent, ALPHAS_IND),
+        fig_sweep("fig9", state_proportional, ALPHAS_PROP),
+        fig15_sweep(),
+        fig16_sweep(),
+    ]
+    return [
+        (s.name, dataclasses.replace(s, name=f"golden_{s.name}", trials=1))
+        for s in sweeps
+    ]
+
+
+def _compute(sweep):
+    from benchmarks.common import mlp_evaluator
+
+    res = run_sweep(sweep, mlp_evaluator())        # fresh, no disk cache
+    return {r.tag: r.values for r in res}
+
+
+def _golden_path(name):
+    return os.path.join(GOLDEN_DIR, f"{name}_smoke.json")
+
+
+def _jax_minor(version):
+    return ".".join(version.split(".")[:2])
+
+
+@pytest.mark.parametrize("name", ["fig8", "fig9", "fig15", "fig16"])
+def test_smoke_grid_matches_golden(name):
+    path = _golden_path(name)
+    assert os.path.exists(path), (
+        f"missing golden {path}; generate with "
+        f"`PYTHONPATH=src python tests/test_goldens.py --regen`")
+    with open(path) as f:
+        golden = json.load(f)
+    if _jax_minor(golden["jax_version"]) != _jax_minor(jax.__version__):
+        pytest.skip(f"golden generated under jax {golden['jax_version']}, "
+                    f"running {jax.__version__}: exact comparison is only "
+                    f"meaningful within one jax minor version")
+    sweep = dict(_smoke_sweeps())[name]
+    values = _compute(sweep)
+    assert set(values) == set(golden["points"]), (
+        "design-point table changed; regenerate goldens if intentional")
+    for tag, vals in values.items():
+        assert vals == golden["points"][tag], (
+            f"{name}:{tag} drifted from golden: {vals} != "
+            f"{golden['points'][tag]} (bit-stability regression, or an "
+            f"intentional numerics change needing --regen)")
+
+
+def regen():
+    os.makedirs(GOLDEN_DIR, exist_ok=True)
+    for name, sweep in _smoke_sweeps():
+        payload = {
+            "jax_version": jax.__version__,
+            "protocol": sweep.point_protocol(),
+            "points": _compute(sweep),
+        }
+        path = _golden_path(name)
+        with open(path, "w") as f:
+            json.dump(payload, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {path} ({len(payload['points'])} points)")
+
+
+if __name__ == "__main__":
+    if "--regen" in sys.argv:
+        regen()
+    else:
+        print(__doc__)

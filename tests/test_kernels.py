@@ -33,6 +33,15 @@ MVM_SHAPES = [
     (16, 2, 8, 8),
 ]
 
+# off-tile-boundary shapes: rows/N far from multiples of 128 (ops.py pads
+# tiles), single-row partitions, and a tall-skinny output
+MVM_EDGE_SHAPES = [
+    (4, 1, 1, 8),
+    (8, 2, 33, 7),
+    (16, 1, 129, 130),
+    (8, 4, 72, 3),
+]
+
 
 @pytest.mark.parametrize("m,p,rows,n", MVM_SHAPES)
 @pytest.mark.parametrize("adc_bits", [6, 8])
@@ -50,7 +59,22 @@ def test_analog_mvm_diff_matches_ref(m, p, rows, n, adc_bits):
     quantizer_allclose(y_k, y_r, flip_atol=lsb * gain * p)
 
 
-@pytest.mark.parametrize("m,p,rows,n", MVM_SHAPES[:4])
+@pytest.mark.parametrize("m,p,rows,n", MVM_EDGE_SHAPES)
+def test_analog_mvm_diff_edge_shapes(m, p, rows, n):
+    ks = jax.random.split(jax.random.PRNGKey(m * 13 + rows), 3)
+    x = jnp.round(jax.random.normal(ks[0], (m, p, rows)) * 40).astype(jnp.float32)
+    gp = jax.random.uniform(ks[1], (p, rows, n)) * 0.1
+    gm = jax.random.uniform(ks[2], (p, rows, n)) * 0.1
+    lo, hi = jnp.float32(-50.0), jnp.float32(50.0)
+    gain = 127.0
+    args = dict(adc_lo=lo, adc_hi=hi, adc_bits=8, gain=gain)
+    y_k = ops.analog_mvm(x, gp, gm, **args)
+    y_r = ref.analog_mvm_diff(x, gp, gm, **args)
+    lsb = 100.0 / 255.0
+    quantizer_allclose(y_k, y_r, flip_atol=lsb * gain * p)
+
+
+@pytest.mark.parametrize("m,p,rows,n", MVM_SHAPES[:4] + MVM_EDGE_SHAPES)
 @pytest.mark.parametrize("n_bits", [4, 7])
 def test_analog_mvm_bitserial_matches_ref(m, p, rows, n, n_bits):
     ks = jax.random.split(jax.random.PRNGKey(m + p + n_bits), 3)
@@ -87,6 +111,12 @@ def test_analog_mvm_dtypes(dtype):
     (32, 96, 24, 1e-4),
     (16, 200, 8, 1e-5),
     (128, 64, 128, 3e-4),
+    # solve-shape edges: minimal chain (k=2), single output column,
+    # full-depth 1152-row line, and the heaviest sag the sweeps use
+    (4, 2, 3, 1e-3),
+    (8, 33, 1, 5e-4),
+    (4, 1152, 4, 1e-4),
+    (16, 72, 8, 5e-3),
 ])
 def test_bitline_kernel_matches_solver(m, k, n, r):
     kx, kg = jax.random.split(jax.random.PRNGKey(k), 2)

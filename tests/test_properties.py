@@ -159,6 +159,88 @@ def test_parasitics_only_reduce_current_magnitude(seed):
     assert bool(jnp.all(sag >= 0))
 
 
+# ---------------------------------------------------------------------------
+# whole-spec strategy: arbitrary valid AnalogSpecs
+# ---------------------------------------------------------------------------
+
+from repro.core import analog as A
+from repro.core.adc import ADCConfig
+from repro.core.analog import AnalogSpec
+from repro.core.errors import ErrorModel, state_independent, state_proportional
+
+
+@st.composite
+def analog_specs(draw):
+    """Generate valid :class:`AnalogSpec` design points.
+
+    Covers both mapping schemes, sliced and unsliced precision, finite and
+    infinite On/Off ratios, the offset unit column, every ADC style, and
+    both input-accumulation modes — the constraints mirror the dataclass
+    ``__post_init__`` validators (unit_column requires offset, etc.).
+    """
+    scheme = draw(st.sampled_from(["differential", "offset"]))
+    bpc = draw(st.sampled_from([None, 1, 2, 4]))
+    onoff = draw(st.sampled_from([float("inf"), 1e4, 100.0, 10.0]))
+    unit_column = scheme == "offset" and draw(st.booleans())
+    mapping = MappingConfig(scheme=scheme, weight_bits=8, bits_per_cell=bpc,
+                            on_off_ratio=onoff, unit_column=unit_column)
+    style = draw(st.sampled_from(["none", "fpg", "calibrated"]))
+    adc = ADCConfig(style=style, bits=draw(st.sampled_from([6, 8])))
+    error = draw(st.sampled_from([
+        ErrorModel(), state_independent(0.02), state_proportional(0.05)]))
+    return AnalogSpec(
+        mapping=mapping,
+        adc=adc,
+        error=error,
+        input_bits=draw(st.sampled_from([4, 8])),
+        input_accum=draw(st.sampled_from(["analog", "digital"])),
+        max_rows=draw(st.sampled_from([16, 40, 1152])),
+    )
+
+
+_PW = jax.random.normal(jax.random.PRNGKey(10), (48, 6)) * 0.05
+_PX = jax.random.normal(jax.random.PRNGKey(11), (5, 48))
+
+
+@given(spec=analog_specs())
+@settings(max_examples=25, deadline=None)
+def test_any_valid_spec_error_free_exactness(spec):
+    """The core invariant over the whole design space: with errors and the
+    ADC disabled, every valid spec reproduces the integer matmul."""
+    import dataclasses as dc
+
+    from repro.core.quant import quantize_acts as qa, quantize_weights as qw
+
+    spec = dc.replace(spec, error=ErrorModel(), adc=ADCConfig(style="none"))
+    aw = A.program(_PW, spec)
+    y = A.analog_matmul(_PX, aw, spec)
+    m = spec.mapping
+    mag = None if m.scheme == "offset" else m.magnitude_bits
+    w_q = qw(_PW, m.weight_bits, magnitude_bits=mag)
+    x_q = qa(_PX, spec.input_bits, signed=True)
+    ref = (x_q.values @ w_q.values) * w_q.scale * x_q.scale
+    rel = float(jnp.max(jnp.abs(y - ref)) / jnp.max(jnp.abs(ref)))
+    assert rel < 1e-5, (spec, rel)
+
+
+@given(spec=analog_specs())
+@settings(max_examples=25, deadline=None)
+def test_any_valid_spec_full_pipeline_well_formed(spec):
+    """Program (with errors) → calibrate → matmul stays finite and shaped
+    for every valid spec, calibrated ranges ordered lo < hi."""
+    from repro.core.calibrate import calibrate_adc_for_matmul
+
+    aw = A.program(_PW, spec, jax.random.PRNGKey(3))
+    kw = {}
+    if spec.adc.style == "calibrated":
+        lo, hi = calibrate_adc_for_matmul(_PX, aw, spec)
+        assert bool(jnp.all(hi > lo))
+        kw = dict(adc_lo=lo, adc_hi=hi)
+    y = A.analog_matmul(_PX, aw, spec, **kw)
+    assert y.shape == (_PX.shape[0], _PW.shape[1])
+    assert bool(jnp.all(jnp.isfinite(y)))
+
+
 def test_energy_model_monotonicity():
     from repro.core import energy as en
     from repro.core.adc import ADCConfig

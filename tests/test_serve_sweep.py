@@ -1,0 +1,180 @@
+"""Tier-2 differential suite for the end-to-end analog LM serving sweep.
+
+Acceptance contract of the serve path (ISSUE 2):
+
+(a) the vectorized ``ServeEvaluator`` sweep matches a serial
+    program → calibrate → eval reference on ≥ 3 design points
+    (identical programming noise by the shared key schedule; losses
+    equal up to vmap-vs-eager float reassociation, bounded here);
+(b) analog loss at the paper's baseline design point (proportional
+    mapping, 8-bit calibrated ADC) tracks the digital loss within the
+    tolerance ``tests/test_system.py`` uses for direct weight transfer;
+(c) serve-sweep results cache on disk and resume without recomputation.
+
+Runs on the trained smoke LM cached by ``benchmarks/lm_accuracy`` (the
+same vehicle the benchmark sweeps).  Marked ``tier2``: executed by the
+nightly / manual CI job (``RUN_TIER2=1``), skipped in the tier-1 suite.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import analog as A
+from repro.core import errors as E
+from repro.core.adc import ADCConfig
+from repro.core.analog import AnalogSpec
+from repro.core.errors import state_proportional
+from repro.core.mapping import MappingConfig
+from repro.sweep import (
+    Axis,
+    ServeEvaluator,
+    SweepSpec,
+    run_sweep,
+    serve_serial_reference,
+)
+from repro.train.step import loss_fn
+
+pytestmark = pytest.mark.tier2
+
+#: loss tolerance between vectorized and serial execution: identical
+#: programming noise, but vmapped calibration/eval reassociates float
+#: reductions; observed deviations are ~2e-4 relative on the smoke LM.
+LOSS_RTOL = 1e-2
+#: top1 counts argmax decisions: traced-alpha batching may flip isolated
+#: ADC rounding boundaries (same policy as tests/test_sweep.py's
+#: calibrated-ADC bound) — allow a few flipped tokens, no more.
+TOP1_FLIP_TOKENS = 4
+DECODE_NEW = 8
+N_DECODED = 4 * DECODE_NEW            # prompts × generated tokens
+#: greedy decode can flip a near-tie argmax under such reassociation,
+#: and one early flip cascades through the rest of that continuation —
+#: allow up to one diverged continuation of the 4 prompts; observed
+#: deviation on the smoke LM is 0.
+MATCH_ATOL = DECODE_NEW / N_DECODED + 1e-9
+
+
+@pytest.fixture(scope="module")
+def vehicle():
+    """(cfg, params, calib tokens, eval batch, prompts) — the trained
+    smoke LM shared with ``benchmarks/lm_accuracy``."""
+    from benchmarks.lm_accuracy import (
+        CALIB_STEP, EVAL_STEP, N_PROMPTS, PROMPT_LEN, trained_lm)
+
+    cfg, ds, params = trained_lm()
+    calib = ds.batch(CALIB_STEP)["tokens"]
+    ev_batch = ds.batch(EVAL_STEP)
+    prompts = ev_batch["tokens"][:N_PROMPTS, :PROMPT_LEN]
+    return cfg, params, calib, ev_batch, prompts
+
+
+def _evaluator(vehicle, **kw):
+    cfg, params, calib, ev_batch, prompts = vehicle
+    return ServeEvaluator(cfg, params, calib, ev_batch["tokens"],
+                          ev_batch["targets"], prompts=prompts,
+                          decode_new=DECODE_NEW, **kw)
+
+
+def _alpha_sweep(name="serve_eq", trials=2):
+    return SweepSpec(
+        name=name,
+        base=AnalogSpec(
+            mapping=MappingConfig(on_off_ratio=1e4),
+            adc=ADCConfig(style="calibrated", bits=8),
+            error=state_proportional(0.0),
+            input_accum="analog",
+            max_rows=1152,
+        ),
+        axes=(Axis("error.alpha", (0.02, 0.05, 0.1)),),
+        trials=trials,
+        seed=7,
+    )
+
+
+def test_vectorized_serve_sweep_matches_serial(vehicle):
+    """(a): 3 design points, vectorized == serial, metric by metric."""
+    cfg, params, calib, ev_batch, prompts = vehicle
+    sweep = _alpha_sweep()
+    res = run_sweep(sweep, _evaluator(vehicle))
+    pts = sweep.expand()
+    assert len(res) == 3
+    for r in res:
+        ref = serve_serial_reference(
+            cfg, params, pts[r.index].spec, calib,
+            ev_batch["tokens"], ev_batch["targets"],
+            prompts=prompts, decode_new=DECODE_NEW,
+            trials=sweep.trials, seed=sweep.seed)
+        assert len(r.values) == len(ref)
+        n_eval = ev_batch["targets"].size
+        for vec, ser in zip(r.values, ref):
+            np.testing.assert_allclose(
+                vec["loss"], ser["loss"], rtol=LOSS_RTOL, atol=1e-3,
+                err_msg=f"{r.tag}:loss")
+            np.testing.assert_allclose(
+                vec["top1"], ser["top1"],
+                atol=TOP1_FLIP_TOKENS / n_eval + 1e-9,
+                err_msg=f"{r.tag}:top1")
+            np.testing.assert_allclose(
+                vec["decode_match"], ser["decode_match"], atol=MATCH_ATOL,
+                err_msg=f"{r.tag}:decode_match")
+
+
+def test_baseline_design_tracks_digital(vehicle):
+    """(b): proportional mapping + 8-bit calibrated ADC, the paper's
+    recommended design, loses little vs digital (test_system tolerance)."""
+    cfg, params, calib, ev_batch, prompts = vehicle
+    dig = float(loss_fn(cfg, params, ev_batch)[0])
+    sweep = SweepSpec.from_points(
+        "serve_baseline",
+        [("design_a_sonos", A.design_a(error=E.sonos()))],
+        trials=2, seed=7,
+    )
+    res = run_sweep(sweep, _evaluator(vehicle))
+    al = res.metric("design_a_sonos", "loss")
+    assert np.isfinite(al)
+    # same tolerance as tests/test_system.py's direct-weight-transfer check
+    assert al < dig * 1.35 + 0.2, (dig, al)
+    # serving-level sanity: greedy decode through the pack mostly agrees
+    # with the digital model at the recommended design point
+    assert res.metric("design_a_sonos", "decode_match") > 0.5
+
+
+class _Counting:
+    def __init__(self, inner):
+        self.inner, self.calls = inner, 0
+
+    def signature(self):
+        return self.inner.signature()
+
+    def dynamic_fields(self, spec):
+        return self.inner.dynamic_fields(spec)
+
+    def evaluate_group(self, *a, **kw):
+        self.calls += 1
+        return self.inner.evaluate_group(*a, **kw)
+
+
+def test_serve_sweep_results_cache_and_resume(vehicle, tmp_path):
+    """(c): on-disk cache round-trips dict-valued trials and resumes."""
+    ev = _Counting(_evaluator(vehicle))
+    sweep = dataclasses.replace(
+        _alpha_sweep(name="serve_cache"),
+        axes=(Axis("error.alpha", (0.02, 0.1)),), trials=1)
+    res1 = run_sweep(sweep, ev, cache_dir=str(tmp_path))
+    assert ev.calls == 1 and res1.n_cached == 0
+    assert (tmp_path / "sweeps" / "serve_cache.json").exists()
+
+    res2 = run_sweep(sweep, ev, cache_dir=str(tmp_path))
+    assert ev.calls == 1, "resume must not recompute"
+    assert res2.n_cached == 2
+    for r1, r2 in zip(res1, res2):
+        assert r1.values == r2.values
+        assert r1.metric_mean("loss") == r2.metric_mean("loss")
+
+    # widened grid: only the new point evaluates
+    wider = dataclasses.replace(
+        sweep, axes=(Axis("error.alpha", (0.02, 0.1, 0.2)),))
+    res3 = run_sweep(wider, ev, cache_dir=str(tmp_path))
+    assert ev.calls == 2
+    assert res3.n_cached == 2 and len(res3) == 3

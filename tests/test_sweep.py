@@ -263,6 +263,70 @@ def test_resume_from_cache(vehicle, tmp_path):
         assert r1.values == r4.values
 
 
+def test_cache_misses_on_evaluator_signature_change(vehicle, tmp_path):
+    """A version bump in the evaluator signature must invalidate points."""
+    ev1 = _CountingEvaluator(ClassifierEvaluator(*vehicle, version="v1"))
+    run_sweep(_cache_sweep(), ev1, cache_dir=str(tmp_path))
+    assert ev1.calls == 1
+
+    ev2 = _CountingEvaluator(ClassifierEvaluator(*vehicle, version="v2"))
+    res = run_sweep(_cache_sweep(), ev2, cache_dir=str(tmp_path))
+    assert ev2.calls == 1, "changed signature must miss the cache"
+    assert res.n_cached == 0
+
+
+def test_cache_misses_on_spec_change(vehicle, tmp_path):
+    """Any spec field outside the axes must be part of the cache key."""
+    ev = _CountingEvaluator(_evaluator(vehicle))
+    run_sweep(_cache_sweep(), ev, cache_dir=str(tmp_path))
+    assert ev.calls == 1
+
+    changed = dataclasses.replace(
+        _cache_sweep(),
+        base=dataclasses.replace(_cache_sweep().base, input_bits=7))
+    res = run_sweep(changed, ev, cache_dir=str(tmp_path))
+    assert ev.calls == 2, "changed base spec must miss the cache"
+    assert res.n_cached == 0
+
+
+def test_cache_misses_on_trial_protocol_change(vehicle, tmp_path):
+    """trials / seed / test_n are part of a point's cache identity."""
+    ev = _CountingEvaluator(_evaluator(vehicle))
+    run_sweep(_cache_sweep(), ev, cache_dir=str(tmp_path))
+    calls = ev.calls
+    for change in (dict(trials=3), dict(seed=99), dict(test_n=32)):
+        res = run_sweep(
+            dataclasses.replace(_cache_sweep(), **change), ev,
+            cache_dir=str(tmp_path))
+        calls += 1
+        assert ev.calls == calls, f"{change} must miss the cache"
+        assert res.n_cached == 0
+
+
+def test_cache_hits_on_axis_reordering(vehicle, tmp_path):
+    """Reordering unrelated grid factors yields the same spec set and
+    must be served fully from cache (identity is the spec, not the tag
+    or expansion order)."""
+    ab = SweepSpec(
+        name="reorder_t",
+        base=AnalogSpec(adc=ADCConfig(style="none"),
+                        error=state_proportional(0.0)),
+        axes=(Axis("error.alpha", (0.02, 0.1)),
+              Axis("max_rows", (72, 1152))),
+        trials=1,
+    )
+    ba = dataclasses.replace(ab, axes=tuple(reversed(ab.axes)))
+    ev = _CountingEvaluator(_evaluator(vehicle))
+    res1 = run_sweep(ab, ev, cache_dir=str(tmp_path))
+    calls = ev.calls
+    res2 = run_sweep(ba, ev, cache_dir=str(tmp_path))
+    assert ev.calls == calls, "reordered axes must hit the cache"
+    assert res2.n_cached == len(res2) == 4
+    by_spec1 = {repr(ab.expand()[r.index].spec): r.values for r in res1}
+    by_spec2 = {repr(ba.expand()[r.index].spec): r.values for r in res2}
+    assert by_spec1 == by_spec2
+
+
 def test_function_evaluator_vmapped_trials(tmp_path):
     def probe(spec, key):
         return jax.random.normal(key, ()) * 0.0 + spec.mapping.g_min
