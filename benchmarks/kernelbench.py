@@ -11,7 +11,14 @@ evaluated (a) by the legacy serial per-point loop the benchmarks used to
 hand-roll (``repro.sweep.serial_accuracy``, one eager trial at a time)
 and (b) by the vectorized sweep engine (trials vmapped, same-shape
 points batched as traced scalars, one jitted call per scheme).  Emits
-both wall-clocks and the speedup."""
+both wall-clocks and the speedup.
+
+Part 3: the parasitic bit-line production path — (a) the Pallas Thomas
+kernel vs the dense vmap-of-scan solve on an (M, N, K) grid, (b) the
+fused parasitic Design-A kernel vs its jnp oracle, and (c) the Fig. 19
+grid vectorized (one compile group per scheme, ``r_hat`` traced) vs the
+legacy serial per-level loop — each row carries the speedup in the
+derived column."""
 
 import time
 
@@ -22,6 +29,7 @@ from repro.core.adc import ADCConfig
 from repro.core.analog import AnalogSpec
 from repro.core.errors import state_proportional
 from repro.core.mapping import MappingConfig
+from repro.core.parasitics import bitline_currents
 from repro.kernels import ops, ref
 from repro.sweep import Axis, SweepSpec
 
@@ -64,6 +72,91 @@ def kernel_micro(timer: Timer):
         us_r = timer.time(f_r, g, x)
         emit(f"kernel_bitline_{m}x{k}x{n}", us_k,
              f"ref_us={us_r:.1f} tridiag_solves={m*n}")
+
+
+def bitline_bench(timer: Timer):
+    """Pallas bit-line solve vs the dense vmap-of-scan reference, plus the
+    fused parasitic Design-A kernel, on an (M, N, K) grid."""
+    r = 1e-4
+    for (m, n, k) in [(128, 128, 256), (128, 128, 1152), (256, 256, 576)]:
+        kx, kg = jax.random.split(jax.random.PRNGKey(k), 2)
+        x = jnp.sign(jax.random.normal(kx, (m, k)))
+        g = jax.random.uniform(kg, (k, n))
+        f_k = jax.jit(lambda g, x: ops.bitline_mvm(g, x, r))
+        f_d = jax.jit(lambda g, x: bitline_currents(g, x, r))
+        us_k = timer.time(f_k, g, x)
+        us_d = timer.time(f_d, g, x)
+        emit(f"bitline_pallas_{m}x{n}x{k}", us_k,
+             f"dense_us={us_d:.1f} speedup={us_d / max(us_k, 1e-9):.2f}x "
+             f"tridiag_solves={m * n} depth={k} interpret=True")
+
+    for (m, p, rows, n) in [(128, 1, 256, 128), (128, 2, 576, 128)]:
+        ks = jax.random.split(jax.random.PRNGKey(m + rows), 3)
+        x = jnp.round(jax.random.normal(ks[0], (m, p, rows)) * 40)
+        gp = jax.random.uniform(ks[1], (p, rows, n)) * 0.1
+        gm = jax.random.uniform(ks[2], (p, rows, n)) * 0.1
+        args = dict(r_hat=r, n_bits=7, adc_lo=jnp.float32(-50.0),
+                    adc_hi=jnp.float32(50.0), adc_bits=8, gain=127.0)
+        f_k = jax.jit(lambda x, gp, gm: ops.analog_mvm_parasitic(
+            x, gp, gm, **args))
+        f_r = jax.jit(lambda x, gp, gm: ref.analog_mvm_parasitic_diff(
+            x, gp, gm, **args))
+        us_k = timer.time(f_k, x, gp, gm)
+        us_r = timer.time(f_r, x, gp, gm)
+        emit(f"bitline_fused_diff_{m}x{p}x{rows}x{n}", us_k,
+             f"ref_us={us_r:.1f} speedup={us_r / max(us_k, 1e-9):.2f}x "
+             f"bits=7 interpret=True")
+
+
+def fig19_engine_speedup():
+    """Fig. 19 batched (traced r_hat, one compile group per scheme) vs the
+    pre-dynamic-r_hat behavior (every parasitic level its own compiled
+    program) — the compile-amortization win the dynamic field buys.
+
+    Both paths run the same vectorized evaluator; the serial arm feeds it
+    one single-point sweep at a time, so ``r_hat`` is a constant in every
+    group and each level pays its own tridiagonal-solve compilation —
+    exactly how the grid executed when ``r_hat`` was a static field.
+    (The fully-eager legacy loop is minutes per parasitic point; see
+    ``sweep_engine_speedup`` for that comparison on the error grid.)
+    """
+    from benchmarks.fig19_parasitics import fig19_sweep
+
+    train_mlp()
+    eval_data()
+    sweep = fig19_sweep((1e-5, 3e-5, 1e-4, 3e-4, 1e-3), trials=1,
+                        test_n=32)
+    points = sweep.expand()
+
+    t0 = time.perf_counter()
+    per_point = {}
+    for pt in points:
+        one = SweepSpec(name=f"fig19_pt{pt.index}", base=pt.spec,
+                        trials=sweep.trials, seed=sweep.seed,
+                        test_n=sweep.test_n)
+        per_point[pt.tag] = run_bench_sweep(one, cache=False).results[0].mean
+    t_serial = time.perf_counter() - t0         # one compile per level
+
+    t0 = time.perf_counter()
+    res = run_bench_sweep(sweep, cache=False)
+    t_cold = time.perf_counter() - t0           # 2 compiles, all levels
+
+    t0 = time.perf_counter()
+    run_bench_sweep(sweep, cache=False)         # compiled fns reused
+    t_warm = time.perf_counter() - t0
+
+    max_dev = max(abs(res.mean(tag) - acc) for tag, acc in per_point.items())
+    n = len(points)
+    emit("fig19_per_point_compile", t_serial * 1e6,
+         f"points={n} wall_s={t_serial:.2f} (one compile per r_hat level)")
+    emit("fig19_batched_cold", t_cold * 1e6,
+         f"points={n} wall_s={t_cold:.2f} (r_hat traced: 2 compile groups)")
+    emit("fig19_batched_warm", t_warm * 1e6,
+         f"points={n} wall_s={t_warm:.2f}")
+    emit("fig19_speedup", 0.0,
+         f"per_point={t_serial:.2f}s vs batched cold={t_cold:.2f}s "
+         f"({t_serial / max(t_cold, 1e-9):.2f}x) / warm={t_warm:.2f}s "
+         f"({t_serial / max(t_warm, 1e-9):.2f}x) max_acc_dev={max_dev:.4f}")
 
 
 def sweep_engine_speedup():
@@ -116,10 +209,15 @@ def sweep_engine_speedup():
 
 
 def main(timer: Timer):
-    # the two parts are independent: a Pallas interpret-mode failure (the
-    # kernels are TPU-first) must not mask the sweep-engine measurement.
+    # the parts are independent: a Pallas interpret-mode failure (the
+    # kernels are TPU-first) must not mask the sweep-engine measurements.
     try:
         kernel_micro(timer)
     except Exception as e:
         emit("kernel_micro_ERROR", 0.0, repr(e)[:200])
+    try:
+        bitline_bench(timer)
+    except Exception as e:
+        emit("bitline_bench_ERROR", 0.0, repr(e)[:200])
     sweep_engine_speedup()
+    fig19_engine_speedup()

@@ -19,7 +19,11 @@ Claims validated at LM scale:
     (8-bit calibrated ADC) while the offset/fixed-precision-slicing
     scheme loses more under the same cell errors;
   * a calibrated 8-bit ADC is ~free for the differential scheme even
-    though B_out >> 8 (the Full Precision Fallacy at network scale).
+    though B_out >> 8 (the Full Precision Fallacy at network scale);
+  * Fig. 19 at serving scale (``lm_parasitics``): an ``r_hat`` axis swept
+    end-to-end through program -> calibrate -> serve -> decode, the whole
+    axis one compile group with ``r_hat`` traced — differential mapping
+    degrades gracefully up to the realistic parasitic operating point.
 
 The trained smoke LM is cached under ``benchmarks/_cache`` like the MLP
 vehicle; sweep results cache and resume under ``_cache/sweeps``.
@@ -134,6 +138,38 @@ def lm_sweep(*, smoke: bool = False) -> SweepSpec:
     )
 
 
+#: the LM-serving Fig. 19 axis; the paper's realistic operating point is
+#: r_hat <= 1e-5 for differential cells (Sec. 8)
+R_HATS = (1e-5, 1e-4, 1e-3)
+
+
+def lm_parasitics_sweep(*, smoke: bool = False) -> SweepSpec:
+    """The serving-scale Fig. 19 grid: an ``r_hat`` axis on Design-A-style
+    points (differential, analog accumulation, calibrated 8-bit ADC).
+
+    All levels share one compile group — ``r_hat`` is a traced dynamic
+    field of :class:`~repro.sweep.ServeEvaluator`, only the (static)
+    parasitics on/off bit changes the program.  ``test_n`` applies the
+    paper's subset trick: the per-bit tridiagonal solves make these the
+    most expensive serving points.
+    """
+    r_hats = (1e-4,) if smoke else R_HATS
+    return SweepSpec(
+        name="lm_parasitics_smoke" if smoke else "lm_parasitics",
+        base=AnalogSpec(
+            mapping=MappingConfig(on_off_ratio=1e4),
+            adc=ADCConfig(style="calibrated", bits=8),
+            error=state_proportional(0.02),
+            max_rows=1152,
+        ),
+        axes=(Axis("r_hat", r_hats,
+                   labels=tuple(f"r{r:g}" for r in r_hats)),),
+        trials=trials_for(2),
+        seed=1234,
+        test_n=4,
+    )
+
+
 def main(timer: Timer):
     from benchmarks import common
 
@@ -159,3 +195,21 @@ def main(timer: Timer):
     emit("lm_claim_proportional_beats_offset", 0.0,
          f"prop={prop:.4f} < offset={off:.4f}: {prop < off} "
          f"(digital={dig:.4f})")
+
+    # Fig. 19 at serving scale: r_hat swept end to end through
+    # program -> calibrate -> serve -> decode, one compile group
+    psweep = lm_parasitics_sweep(smoke=common.SMOKE)
+    pres = run_bench_sweep(psweep, lm_evaluator())
+    ptrials = max(psweep.trials, 1)
+    for r in pres:
+        emit(f"lm_{psweep.name}_{r.tag}", r.wall_s * 1e6 / ptrials,
+             f"loss={r.metric_mean('loss'):.4f} "
+             f"top1={r.metric_mean('top1'):.4f} "
+             f"decode_match={r.metric_mean('decode_match'):.2f}")
+    if not common.SMOKE:
+        lo_l = pres.metric(f"r{R_HATS[0]:g}", "loss")
+        hi_l = pres.metric(f"r{R_HATS[-1]:g}", "loss")
+        emit("lm_claim_parasitics_graceful", 0.0,
+             f"loss@r{R_HATS[0]:g}={lo_l:.4f} <= "
+             f"loss@r{R_HATS[-1]:g}={hi_l:.4f}: {lo_l <= hi_l} "
+             f"(digital={dig:.4f})")

@@ -8,9 +8,11 @@ Positional ``module`` names (substring match, like ``--only``) restrict
 the run, e.g. ``python -m benchmarks.run lm_accuracy --smoke``.
 
 ``--smoke`` is the CI fast path: the Fig. 10 On/Off sweep (a single
-compile group exercising the whole vectorized engine) plus the LM
-serving sweep (``lm_accuracy`` — program → calibrate → serve end to
-end), one programming trial per point, fresh (uncached) evaluation.
+compile group exercising the whole vectorized engine), the Fig. 19
+parasitic grid (the traced-``r_hat`` bit-line solve path), plus the LM
+serving sweeps (``lm_accuracy`` — program → calibrate → serve end to
+end, including the serving-scale parasitic axis), one programming trial
+per point, fresh (uncached) evaluation.
 """
 
 import argparse
@@ -33,7 +35,7 @@ MODULES = [
     "roofline",
 ]
 
-SMOKE_MODULES = ["fig10_onoff", "lm_accuracy"]
+SMOKE_MODULES = ["fig10_onoff", "fig19_parasitics", "lm_accuracy"]
 
 
 def main() -> None:

@@ -72,6 +72,21 @@ class AnalogSpec:
         assert self.input_accum in ("analog", "digital")
 
     @property
+    def parasitics_on(self) -> bool:
+        """Static program-structure bit: is the bit-line solve in-graph?
+
+        ``r_hat`` itself is allowed to be a *traced* scalar (the sweep
+        engine batches a whole parasitic axis through one compilation),
+        but whether the tridiagonal solve exists in the program at all is
+        a compile-time property.  Concrete ``r_hat``: on iff nonzero
+        (any scalar form — see :func:`parasitics.parasitics_off`).  A
+        traced ``r_hat`` always means "on" — only ``r_hat > 0`` points
+        are batched; the ``r_hat == 0`` short-circuit is a different
+        compiled program, never a traced value.
+        """
+        return not parasitics.parasitics_off(self.r_hat)
+
+    @property
     def n_planes(self) -> int:
         return n_input_planes(self.input_bits, self.signed_inputs)
 
@@ -236,12 +251,29 @@ def _apply_line(
     spec: AnalogSpec,
 ) -> jax.Array:
     """Per-plane analog dot products -> (B, S, P, M, N)."""
-    if spec.r_hat == 0.0:
+    if not spec.parasitics_on:
         return jnp.einsum(
             "bmpr,sprn->bspmn", planes, g, precision=jax.lax.Precision.HIGHEST
         )
     b, m_, p, rows = planes.shape
     s, _, _, n = g.shape
+
+    if spec.use_pallas:
+        # Hot path: the Pallas Thomas-solve kernel, bit planes folded into
+        # the kernel's independent-systems axis.  One call per (slice,
+        # partition) via vmap (S and P are small static factors); the
+        # dense lax.scan path below stays as the parity oracle.
+        from repro.kernels import ops as kops
+
+        xp = jnp.moveaxis(planes, 2, 0).reshape(p, b * m_, rows)
+
+        def per_p(g_p, x_p):           # (rows, N), (B*M, rows)
+            return kops.bitline_mvm(g_p, x_p, spec.r_hat)
+
+        per_sp = jax.vmap(jax.vmap(per_p, in_axes=(0, 0)), in_axes=(0, None))
+        out = per_sp(g, xp)            # (S, P, B*M, N)
+        out = out.reshape(s, p, b, m_, n)
+        return jnp.transpose(out, (2, 0, 1, 3, 4))       # (B, S, P, M, N)
 
     def one(plane_pk, g_pk):           # (M, rows), (rows, N)
         return parasitics.bitline_currents(g_pk, plane_pk, spec.r_hat)
@@ -254,14 +286,15 @@ def _apply_line(
 
 
 def _maybe_pallas_fastpath(spec: AnalogSpec, collect: bool) -> bool:
-    """The fused kernel covers the paper's recommended design point."""
+    """The fused kernels cover the paper's recommended design point —
+    ideal (``analog_mvm``) and parasitic (``analog_mvm_parasitic``) alike;
+    the caller dispatches on ``spec.parasitics_on``."""
     return (
         spec.use_pallas
         and not collect
         and spec.mapping.scheme == "differential"
         and not spec.mapping.sliced
         and spec.input_accum == "analog"
-        and spec.r_hat == 0.0
         and spec.adc.style == "calibrated"
     )
 
@@ -306,14 +339,25 @@ def analog_matmul(
     if _maybe_pallas_fastpath(spec, collect) and adc_lo is not None:
         from repro.kernels import ops as kops
 
-        d_codes = kops.analog_mvm(
-            x_parts, aw.g_pos[:, :, :, : aw.n], aw.g_neg[:, :, :, : aw.n],
-            adc_lo=adc_lo, adc_hi=adc_hi, adc_bits=spec.adc.bits, gain=gain,
-        )
+        if spec.parasitics_on:
+            d_codes = kops.analog_mvm_parasitic(
+                x_parts,
+                aw.g_pos[:, :, :, : aw.n], aw.g_neg[:, :, :, : aw.n],
+                r_hat=spec.r_hat, n_bits=spec.n_planes,
+                adc_lo=adc_lo, adc_hi=adc_hi, adc_bits=spec.adc.bits,
+                gain=gain,
+            )
+        else:
+            d_codes = kops.analog_mvm(
+                x_parts,
+                aw.g_pos[:, :, :, : aw.n], aw.g_neg[:, :, :, : aw.n],
+                adc_lo=adc_lo, adc_hi=adc_hi, adc_bits=spec.adc.bits,
+                gain=gain,
+            )
         y = d_codes * aw.w_scale * xq.scale
         return y.reshape(*lead, aw.n)
 
-    if spec.input_accum == "analog" and spec.r_hat == 0.0:
+    if spec.input_accum == "analog" and not spec.parasitics_on:
         # Analog accumulation over input bits commutes with the dot product:
         # sum_b 2^b plane_b == x_int, so one matmul per (slice, partition).
         planes = x_parts[None]                               # (1, M, P, rows)
@@ -329,7 +373,7 @@ def analog_matmul(
         v = v_pos - _apply_line(planes, aw.g_neg, spec)      # analog subtract
     else:
         v = v_pos
-    if spec.input_accum == "analog" and spec.r_hat != 0.0:
+    if spec.input_accum == "analog" and spec.parasitics_on:
         # Parasitic solve is per input bit; analog accumulation happens in
         # the switched-capacitor stage after the bit-line, before the ADC.
         v = jnp.einsum("b,bspmn->spmn", bit_w, v)[None]

@@ -261,7 +261,3 @@ def average_conductance(pw: ProgrammedWeights) -> jax.Array:
     gs = [pw.g_pos] + ([pw.g_neg] if pw.g_neg is not None else [])
     stacked = jnp.concatenate([g.reshape(g.shape[0], -1) for g in gs], axis=-1)
     return jnp.mean(stacked, axis=-1)
-
-
-def slice_weights_float() -> None:  # pragma: no cover - placeholder guard
-    raise NotImplementedError

@@ -29,13 +29,38 @@ import jax.numpy as jnp
 from jax import lax
 
 
+def parasitics_off(r_hat) -> bool:
+    """True iff ``r_hat`` is a *concrete* zero, in any scalar form (Python
+    float/int, numpy scalar, concrete jnp array).
+
+    The on/off decision is program structure, never data: a traced value
+    always means the solve is in the graph (the sweep engine only batches
+    ``r_hat > 0`` points — ``AnalogSpec.parasitics_on``), while a concrete
+    zero of any dtype must take the ideal-matmul short-circuit (running
+    the Thomas sweep at ``r = 0`` divides by zero into silent NaNs).
+    """
+    if isinstance(r_hat, jax.core.Tracer):
+        return False
+    try:
+        return float(r_hat) == 0.0
+    except TypeError:
+        return False
+
+
 def bitline_currents(
     g: jax.Array,        # (K, N) normalized conductances of one line stack
     x: jax.Array,        # (M, K) signed input plane, values in {-1, 0, +1}
-    r_hat: float,        # normalized parasitic resistance R_p * G_max
+    r_hat,               # normalized parasitic resistance R_p * G_max;
+                         # traced scalars run the solve unconditionally
 ) -> jax.Array:
-    """Output currents (M, N) of N bit lines under parasitic resistance."""
-    if r_hat == 0.0:
+    """Output currents (M, N) of N bit lines under parasitic resistance.
+
+    The ``r_hat == 0`` short-circuit (see :func:`parasitics_off`) is a
+    *program-structure* decision: the sweep engine substitutes traced
+    scalars for ``r_hat`` (one compiled program for a whole Fig. 19 axis),
+    and a traced value always means the solve is in the graph.
+    """
+    if parasitics_off(r_hat):
         return x @ g
 
     a = jnp.abs(x)                                     # gate bits   (M, K)

@@ -41,6 +41,14 @@ def _adc_epilogue(v, lo, hi, bits: int):
     return lo + code * lsb
 
 
+def _bit_plane(mag, sign, b: int):
+    """In-VMEM signed bit-plane extraction from float-encoded integers:
+    plane_b = bit b of |x|, carrying sign(x).  Shared by every bit-serial
+    kernel (Design D here, the parasitic Design-A path in bitline.py) so
+    the input-plane encoding cannot diverge between them."""
+    return (jnp.floor(mag / 2.0 ** b) % 2.0) * sign
+
+
 def _diff_kernel(x_ref, gp_ref, gm_ref, lo_ref, hi_ref, o_ref, *,
                  adc_bits: int, gain: float):
     """Design-A fast path: one matmul + ADC per (tile, partition)."""
@@ -77,11 +85,10 @@ def _bitserial_kernel(x_ref, gp_ref, gm_ref, lo_ref, hi_ref, o_ref, *,
     mag = jnp.abs(x)
     acc = jnp.zeros_like(o_ref)
     for b in range(n_bits):                # static unroll: n_bits <= 7
-        scale = 2.0 ** b
-        plane = (jnp.floor(mag / scale) % 2.0) * sign
+        plane = _bit_plane(mag, sign, b)
         v = jnp.dot(plane, g, preferred_element_type=jnp.float32)
         v_hat = _adc_epilogue(v, lo, hi, adc_bits)
-        acc += (v_hat * scale).astype(acc.dtype)
+        acc += (v_hat * 2.0 ** b).astype(acc.dtype)
     o_ref[...] += acc * gain
 
 

@@ -1,4 +1,4 @@
-"""Pallas TPU kernel for the parasitic bit-line solve (paper Sec. 8).
+"""Pallas TPU kernels for the parasitic bit-line solve (paper Sec. 8).
 
 One (bm, bn) output tile solves bm*bn independent tridiagonal systems of
 depth K — one per (input sample, bit line).  The Thomas forward sweep is a
@@ -9,8 +9,27 @@ current is the current through the bottom segment), so no back-substitution
 pass or per-row voltage storage is required — this is the structural win
 over a dense solve (O(K) work, O(1) state per line).
 
-Grid: (M // bm, N // bn); K is kept whole inside the kernel (K <= 1152 for
-realistic arrays: x tile 128x1152 f32 = 0.6 MB, g tile 1152x128 = 0.6 MB).
+``r_hat`` is a *traced* scalar input (a (1, 1) array read inside the
+kernel), not a Python-float closure constant: the sweep engine batches a
+whole Fig. 19 ``r_hat`` axis through one compiled program by substituting
+traced values, so the kernel must not bake the parasitic level into the
+compiled artifact.  Whether parasitics are in the program at all is a
+*static* bit decided by the caller (``AnalogSpec.parasitics_on``).
+
+Two kernels:
+
+* :func:`bitline_mvm_pallas` — one signed input plane through the
+  parasitic circuit (the building block ``core.analog._apply_line``
+  dispatches to per (slice, partition)).
+* :func:`analog_bitline_diff_pallas` — the fused Design-A fast path:
+  in-VMEM input bit-plane extraction, per-bit Thomas solves for both
+  differential lines, analog (switched-capacitor) accumulation over bits,
+  one ADC per (tile, partition), digital accumulation over partitions —
+  the parasitic analogue of ``analog_mvm._diff_kernel``.
+
+Grid: (M // bm, N // bn[, P]); K is kept whole inside the kernel
+(K <= 1152 for realistic arrays: x tile 128x1152 f32 = 0.6 MB, g tile
+1152x128 = 0.6 MB).
 """
 
 from __future__ import annotations
@@ -24,21 +43,21 @@ from jax.experimental import pallas as pl
 from repro.kernels.compat import COMPILER_PARAMS
 
 
-def _bitline_kernel(g_ref, x_ref, o_ref, *, r_hat: float, k: int):
-    x = x_ref[...]                    # (bm, K) signed plane
-    g = g_ref[...]                    # (K, bn)
-    a = jnp.abs(x)
-
-    bm = x.shape[0]
+def _thomas_bottom_current(plane, g, r, *, k: int):
+    """Bottom-node current (bm, bn) of one signed plane through one line
+    stack: Thomas forward sweep over rows; d'_{K-1} IS v_{K-1} since
+    c_{K-1} = 0 in back-substitution, and I = v_{K-1} / r."""
+    a = jnp.abs(plane)
+    bm = plane.shape[0]
     bn = g.shape[1]
 
     def body(i, carry):
         c_prev, d_prev = carry                        # (bm, bn)
         g_i = jax.lax.dynamic_slice(g, (i, 0), (1, bn))      # (1, bn)
-        x_i = jax.lax.dynamic_slice(x, (0, i), (bm, 1))      # (bm, 1)
+        x_i = jax.lax.dynamic_slice(plane, (0, i), (bm, 1))  # (bm, 1)
         a_i = jax.lax.dynamic_slice(a, (0, i), (bm, 1))
-        gr = a_i * g_i * r_hat                        # (bm, bn)
-        rhs = x_i * g_i * r_hat
+        gr = a_i * g_i * r                            # (bm, bn)
+        rhs = x_i * g_i * r
         base = jnp.where(i == 0, 1.0, 2.0)
         denom = base + gr + c_prev
         c_new = -1.0 / denom
@@ -47,29 +66,41 @@ def _bitline_kernel(g_ref, x_ref, o_ref, *, r_hat: float, k: int):
 
     zeros = jnp.zeros((bm, bn), jnp.float32)
     _, d_last = jax.lax.fori_loop(0, k, body, (zeros, zeros))
-    o_ref[...] = (d_last / r_hat).astype(o_ref.dtype)
+    return d_last / r
+
+
+def _bitline_kernel(r_ref, g_ref, x_ref, o_ref, *, k: int):
+    x = x_ref[...]                    # (bm, K) signed plane
+    g = g_ref[...]                    # (K, bn)
+    r = r_ref[0, 0]
+    out = _thomas_bottom_current(x, g, r, k=k)
+    o_ref[...] = out.astype(o_ref.dtype)
 
 
 def bitline_mvm_pallas(
     g: jax.Array,          # (K, N)
     x: jax.Array,          # (M, K) signed plane
-    r_hat: float,
+    r_hat,                 # scalar (traced or concrete) parasitic level
     *,
     bm: int = 128,
     bn: int = 128,
     interpret: bool = True,
 ) -> jax.Array:
     """Output currents (M, N) under parasitic bit-line resistance."""
-    if r_hat == 0.0:
+    from repro.core.parasitics import parasitics_off
+
+    if parasitics_off(r_hat):
         return x @ g
     k, n = g.shape
     m = x.shape[0]
     assert m % bm == 0 and n % bn == 0, (m, n, bm, bn)
-    kern = functools.partial(_bitline_kernel, r_hat=float(r_hat), k=k)
+    r2 = jnp.asarray(r_hat, jnp.float32).reshape(1, 1)
+    kern = functools.partial(_bitline_kernel, k=k)
     return pl.pallas_call(
         kern,
         grid=(m // bm, n // bn),
         in_specs=[
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
             pl.BlockSpec((k, bn), lambda i, j: (0, j)),
             pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
         ],
@@ -78,4 +109,80 @@ def bitline_mvm_pallas(
         compiler_params=COMPILER_PARAMS(
             dimension_semantics=("parallel", "parallel")),
         interpret=interpret,
-    )(g, x)
+    )(r2, g, x)
+
+
+def _parasitic_diff_kernel(r_ref, lo_ref, hi_ref, x_ref, gp_ref, gm_ref,
+                           o_ref, *, n_bits: int, adc_bits: int,
+                           gain: float, rows: int):
+    """Fused parasitic Design-A path: per input bit, Thomas-solve both
+    differential lines, analog-accumulate over bits, one ADC per
+    partition, digital accumulation over partitions."""
+    from repro.kernels.analog_mvm import _adc_epilogue, _bit_plane
+
+    p = pl.program_id(2)
+
+    @pl.when(p == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[:, 0, :]                     # (bm, rows) signed integer-valued
+    gp = gp_ref[0]                         # (rows, bn)
+    gm = gm_ref[0]
+    r = r_ref[0, 0]
+    sign = jnp.sign(x)
+    mag = jnp.abs(x)
+
+    acc = jnp.zeros((x.shape[0], gp.shape[1]), jnp.float32)
+    for b in range(n_bits):                # static unroll: n_bits <= 7
+        plane = _bit_plane(mag, sign, b)
+        i_pos = _thomas_bottom_current(plane, gp, r, k=rows)
+        i_neg = _thomas_bottom_current(plane, gm, r, k=rows)
+        acc += 2.0 ** b * (i_pos - i_neg)  # switched-capacitor bit accum
+
+    v_hat = _adc_epilogue(acc, lo_ref[0, 0], hi_ref[0, 0], adc_bits)
+    o_ref[...] += (v_hat * gain).astype(o_ref.dtype)
+
+
+def analog_bitline_diff_pallas(
+    x_parts: jax.Array,    # (M, P, rows) integer-valued signed
+    g_pos: jax.Array,      # (P, rows, N)
+    g_neg: jax.Array,      # (P, rows, N)
+    r_hat,                 # scalar (traced or concrete) parasitic level
+    adc_lo: jax.Array,
+    adc_hi: jax.Array,
+    *,
+    n_bits: int,
+    adc_bits: int,
+    gain: float,
+    bm: int = 128,
+    bn: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """Fused Design-A MVM under parasitic resistance; (M, N) code units."""
+    m, p, rows = x_parts.shape
+    _, _, n = g_pos.shape
+    assert m % bm == 0 and n % bn == 0, (m, n, bm, bn)
+    r2 = jnp.asarray(r_hat, jnp.float32).reshape(1, 1)
+    lo2 = jnp.asarray(adc_lo, jnp.float32).reshape(1, 1)
+    hi2 = jnp.asarray(adc_hi, jnp.float32).reshape(1, 1)
+    kern = functools.partial(
+        _parasitic_diff_kernel, n_bits=n_bits, adc_bits=adc_bits,
+        gain=gain, rows=rows)
+    return pl.pallas_call(
+        kern,
+        grid=(m // bm, n // bn, p),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, j, p_: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i, j, p_: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i, j, p_: (0, 0)),
+            pl.BlockSpec((bm, 1, rows), lambda i, j, p_: (i, p_, 0)),
+            pl.BlockSpec((1, rows, bn), lambda i, j, p_: (p_, 0, j)),
+            pl.BlockSpec((1, rows, bn), lambda i, j, p_: (p_, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, p_: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        compiler_params=COMPILER_PARAMS(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(r2, lo2, hi2, x_parts, g_pos, g_neg)

@@ -31,8 +31,18 @@ def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
     return jnp.pad(x, widths)
 
 
-def _pick_tile(size: int, pref: int) -> int:
-    """Largest tile <= pref that keeps padding waste < 2x for tiny sizes."""
+def _pick_tile(size: int, pref: int, *, lane: bool = False) -> int:
+    """Tile size for one grid dimension.
+
+    The lane (last, N) dimension is always the full ``pref`` (128) tile:
+    Mosaic requires lane tiles of 128, so small N pads up to one full
+    tile rather than shrinking it (interpret mode tolerates any tile,
+    which is exactly how a sublane-rounded N tile stayed latent until
+    TPU compilation).  Sublane (M) dimensions may shrink to a multiple
+    of 8 to cap padding waste on small inputs.
+    """
+    if lane:
+        return pref
     if size >= pref:
         return pref
     # round size up to the next multiple of 8 (sublane) as the tile
@@ -57,7 +67,7 @@ def analog_mvm(
     m, p, rows = x_parts.shape
     n = g_pos.shape[-1]
     bm = _pick_tile(m, 128)
-    bn = _pick_tile(n, 128)
+    bn = _pick_tile(n, 128, lane=True)
     xp = _pad_to(x_parts.astype(jnp.float32), 0, bm)
     gp = _pad_to(g_pos.astype(jnp.float32), 2, bn)
     gm = _pad_to(g_neg.astype(jnp.float32), 2, bn)
@@ -89,7 +99,7 @@ def analog_mvm_bitserial(
     m, p, rows = x_parts.shape
     n = g_pos.shape[-1]
     bm = _pick_tile(m, 128)
-    bn = _pick_tile(n, 128)
+    bn = _pick_tile(n, 128, lane=True)
     xp = _pad_to(x_parts.astype(jnp.float32), 0, bm)
     gp = _pad_to(g_pos.astype(jnp.float32), 2, bn)
     gm = _pad_to(g_neg.astype(jnp.float32), 2, bn)
@@ -105,18 +115,66 @@ def analog_mvm_bitserial(
 def bitline_mvm(
     g: jax.Array,            # (K, N)
     x: jax.Array,            # (M, K) signed plane
-    r_hat: float,
+    r_hat,                   # scalar parasitic level (traced or concrete)
     *,
     interpret: bool | None = None,
 ) -> jax.Array:
-    """Parasitic bit-line MVM; returns output currents (M, N)."""
+    """Parasitic bit-line MVM; returns output currents (M, N).
+
+    ``r_hat`` may be a traced scalar (the sweep engine batches a whole
+    Fig. 19 axis through one compilation); a *concrete* 0.0 short-circuits
+    to the ideal matmul — that on/off decision is a program-structure bit
+    and is never traced (``AnalogSpec.parasitics_on``).
+    """
+    from repro.core.parasitics import parasitics_off
+
+    if parasitics_off(r_hat):
+        return x @ g
     interpret = _use_interpret() if interpret is None else interpret
     m, k = x.shape
     n = g.shape[1]
     bm = _pick_tile(m, 128)
-    bn = _pick_tile(n, 128)
+    bn = _pick_tile(n, 128, lane=True)
     xp = _pad_to(x.astype(jnp.float32), 0, bm)
     gp = _pad_to(g.astype(jnp.float32), 1, bn)
-    out = _k_bl.bitline_mvm_pallas(gp, xp, float(r_hat), bm=bm, bn=bn,
+    out = _k_bl.bitline_mvm_pallas(gp, xp, r_hat, bm=bm, bn=bn,
                                    interpret=interpret)
+    return out[:m, :n]
+
+
+def analog_mvm_parasitic(
+    x_parts: jax.Array,      # (M, P, rows) integer-valued signed
+    g_pos: jax.Array,        # (S=1, P, rows, N) or (P, rows, N)
+    g_neg: jax.Array,
+    *,
+    r_hat,                   # scalar parasitic level (traced or concrete)
+    n_bits: int,
+    adc_lo: jax.Array,
+    adc_hi: jax.Array,
+    adc_bits: int,
+    gain: float,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Fused Design-A analog MVM under parasitic bit-line resistance.
+
+    Per input bit plane: Thomas-solve both differential line stacks,
+    analog-accumulate over bits, one ADC per partition, digital partition
+    accumulation — all inside one kernel.  Returns (M, N) code units.
+    """
+    if g_pos.ndim == 4:
+        g_pos, g_neg = g_pos[0], g_neg[0]
+    interpret = _use_interpret() if interpret is None else interpret
+    m, p, rows = x_parts.shape
+    n = g_pos.shape[-1]
+    bm = _pick_tile(m, 128)
+    bn = _pick_tile(n, 128, lane=True)
+    xp = _pad_to(x_parts.astype(jnp.float32), 0, bm)
+    gp = _pad_to(g_pos.astype(jnp.float32), 2, bn)
+    gm = _pad_to(g_neg.astype(jnp.float32), 2, bn)
+    out = _k_bl.analog_bitline_diff_pallas(
+        xp, gp, gm, r_hat,
+        jnp.asarray(adc_lo), jnp.asarray(adc_hi),
+        n_bits=n_bits, adc_bits=adc_bits, gain=float(gain),
+        bm=bm, bn=bn, interpret=interpret,
+    )
     return out[:m, :n]

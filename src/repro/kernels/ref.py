@@ -81,3 +81,38 @@ def bitline_mvm(
     from repro.core.parasitics import bitline_currents
 
     return bitline_currents(g, x, r_hat)
+
+
+def analog_mvm_parasitic_diff(
+    x_parts: jax.Array,   # (M, P, rows) integer-valued, signed
+    g_pos: jax.Array,     # (P, rows, N)
+    g_neg: jax.Array,     # (P, rows, N)
+    *,
+    r_hat: float,
+    n_bits: int,
+    adc_lo,
+    adc_hi,
+    adc_bits: int,
+    gain: float,
+) -> jax.Array:
+    """Design-A path under parasitic bit-line resistance.
+
+    Per input bit plane: both differential line stacks go through the
+    tridiagonal bit-line solve; bits are accumulated in analog (the
+    switched-capacitor stage after the bit line), then one ADC per
+    partition and digital partition accumulation.  Output (M, N), code
+    units — the oracle for ``ops.analog_mvm_parasitic``.
+    """
+    from repro.core.parasitics import bitline_currents
+
+    sign = jnp.sign(x_parts)
+    mag = jnp.abs(x_parts).astype(jnp.int32)
+    solve = jax.vmap(bitline_currents, in_axes=(0, 1, None))  # over P
+    acc = None
+    for b in range(n_bits):
+        plane = (((mag >> b) & 1).astype(x_parts.dtype)) * sign
+        v = solve(g_pos, plane, r_hat) - solve(g_neg, plane, r_hat)
+        contrib = v * (2.0 ** b)                              # (P, M, N)
+        acc = contrib if acc is None else acc + contrib
+    v_hat = adc(acc, adc_lo, adc_hi, adc_bits)
+    return jnp.sum(v_hat, axis=0) * gain

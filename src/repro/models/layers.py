@@ -126,20 +126,30 @@ ACTIVATIONS = {
 
 
 def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
-    """Rotary embedding.  x: (B, S, H, hd); positions: (B, S) or (S,)."""
+    """Rotary embedding.  x: (B, S, H, hd); positions: (B, S) or (S,).
+
+    Formulated as ``x * cos + rotate_half(x) * sin`` with full-length
+    (hd-sized) trig vectors and a roll-based rotate-half.  The textbook
+    slice-into-halves + concatenate form is numerically identical but must
+    not be used here: concatenating slices back together along the head_dim
+    axis miscompiles in the XLA SPMD partitioner when that axis is
+    model-sharded on a multi-axis mesh (within-head tensor parallelism —
+    the 2x4 debug mesh shards wk's kv*hd=32 output dim across 4 devices),
+    silently corrupting k and the training loss.  roll and elementwise ops
+    partition correctly.
+    """
     hd = x.shape[-1]
     half = hd // 2
-    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    idx = jnp.arange(hd)
+    freqs = theta ** (-(idx % half).astype(jnp.float32) / half)     # (hd,)
     if positions.ndim == 1:
         positions = positions[None, :]
-    ang = positions[..., None].astype(jnp.float32) * freqs      # (B, S, half)
+    ang = positions[..., None].astype(jnp.float32) * freqs      # (B, S, hd)
     cos = jnp.cos(ang)[:, :, None, :]
     sin = jnp.sin(ang)[:, :, None, :]
-    x1, x2 = x[..., :half], x[..., half:]
-    out = jnp.concatenate(
-        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
-    )
-    return out.astype(x.dtype)
+    sign = jnp.where(idx < half, -1.0, 1.0)
+    rot = jnp.roll(x, half, axis=-1) * sign                     # [-x2, x1]
+    return (x * cos + rot * sin).astype(x.dtype)
 
 
 # ---------------------------------------------------------------------------

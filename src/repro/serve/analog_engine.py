@@ -28,6 +28,13 @@ in ``error.alpha`` / ``mapping.on_off_ratio``).  The sweep engine
 keys; ``program_lm`` composes the two halves, so the eager path and the
 vectorized path draw identical programming noise by construction.
 
+The full AnalogSpec rides through program → calibrate → serve unchanged,
+parasitics included: a pack whose spec has ``r_hat > 0`` routes every
+weight-stationary matmul (calibration collect passes and KV-cached greedy
+decode alike) through the bit-line tridiagonal solve, and ``r_hat`` stays
+tracer-safe so ``ServeEvaluator`` batches a whole parasitic axis through
+one compilation (DESIGN.md §Parasitics).
+
 Scope: the dense/vlm/ssm(rwkv) transformer family (the paper's technique
 targets weight-stationary MVMs; see DESIGN.md §Arch-applicability for the
 MoE-expert / recurrence caveats).

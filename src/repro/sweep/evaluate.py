@@ -82,7 +82,8 @@ def trial_accuracy(
     ADC ranges (power-of-two constrained when sliced, Sec. 6.2), then
     evaluate test and calibration batches through the analog pipeline.
     Traceable in the trial key and in ``spec.error.alpha`` /
-    ``spec.mapping.on_off_ratio``.
+    ``spec.mapping.on_off_ratio`` / ``spec.r_hat`` (while parasitics are
+    on — the on/off bit itself is static, ``AnalogSpec.parasitics_on``).
     """
     h_te, h_ca = xte, xca
     for i, (w, b) in enumerate(layers):
@@ -135,6 +136,30 @@ def serial_accuracy(
     return float(np.mean(accs)), float(np.std(accs)), accs
 
 
+def dynamic_fields_for(spec: AnalogSpec) -> Dict[str, float]:
+    """The spec fields batchable as traced scalars for ``spec``.
+
+    Shared by every accuracy evaluator (``ClassifierEvaluator``,
+    ``ServeEvaluator``) so the tracer-safety exclusion rules cannot drift
+    apart between the classifier and serving sweep paths:
+
+    * ``error.alpha`` — only for sampled error kinds;
+    * ``mapping.on_off_ratio`` — excluded under the FPG ADC, whose range
+      snapping consumes ``g_min`` in Python ``math.floor``;
+    * ``r_hat`` — only while parasitics are *on*; the on/off bit is a
+      static program property (``AnalogSpec.parasitics_on``), which is
+      what collapses a Fig. 19 axis into one compile group.
+    """
+    dyn: Dict[str, float] = {}
+    if spec.error.kind in ("state_independent", "state_proportional"):
+        dyn["error.alpha"] = float(spec.error.alpha)
+    if spec.adc.style != "fpg":
+        dyn["mapping.on_off_ratio"] = float(spec.mapping.on_off_ratio)
+    if spec.parasitics_on:
+        dyn["r_hat"] = float(spec.r_hat)
+    return dyn
+
+
 def mapping_signature(spec: AnalogSpec) -> str:
     """The fields :func:`program_codes` depends on (g_min-independent).
 
@@ -153,12 +178,6 @@ class ClassifierEvaluator:
     the executor hands it compile groups and it returns per-(point, trial)
     accuracies from a single jitted, optionally mesh-sharded evaluation.
     """
-
-    #: spec fields batchable as traced scalars.  ``error.alpha`` feeds only
-    #: jnp arithmetic (``ErrorModel.sigma``); ``mapping.on_off_ratio``
-    #: feeds ``g_min`` which the FPG ADC path consumes in *Python* math
-    #: (``math.floor`` range snapping) — hence the fpg exclusion below.
-    DYNAMIC_PATHS = ("error.alpha", "mapping.on_off_ratio")
 
     def __init__(
         self,
@@ -189,12 +208,7 @@ class ClassifierEvaluator:
         return self._sig
 
     def dynamic_fields(self, spec: AnalogSpec) -> Dict[str, float]:
-        dyn: Dict[str, float] = {}
-        if spec.error.kind in ("state_independent", "state_proportional"):
-            dyn["error.alpha"] = float(spec.error.alpha)
-        if spec.adc.style != "fpg":
-            dyn["mapping.on_off_ratio"] = float(spec.mapping.on_off_ratio)
-        return dyn
+        return dynamic_fields_for(spec)
 
     def evaluate_group(
         self,

@@ -51,7 +51,12 @@ from repro.serve.analog_engine import (
     program_lm_from_codes,
 )
 from repro.sweep.dispatch import shard_point_trial_batch
-from repro.sweep.evaluate import mapping_signature, materialize, trial_keys
+from repro.sweep.evaluate import (
+    dynamic_fields_for,
+    mapping_signature,
+    materialize,
+    trial_keys,
+)
 
 
 def _hash_tree(h, tree) -> None:
@@ -74,12 +79,6 @@ class ServeEvaluator:
     ``test_n`` (from the sweep protocol) subsamples eval *rows* —
     the LM analogue of the classifier's test-subset trick.
     """
-
-    #: same tracer-safety rules as ``ClassifierEvaluator`` (DESIGN.md
-    #: §Sweep-engine): ``error.alpha`` feeds only jnp arithmetic;
-    #: ``mapping.on_off_ratio`` is excluded under the FPG ADC whose range
-    #: snapping is Python math.
-    DYNAMIC_PATHS = ("error.alpha", "mapping.on_off_ratio")
 
     def __init__(
         self,
@@ -128,12 +127,7 @@ class ServeEvaluator:
         return self._sig
 
     def dynamic_fields(self, spec: AnalogSpec) -> Dict[str, float]:
-        dyn: Dict[str, float] = {}
-        if spec.error.kind in ("state_independent", "state_proportional"):
-            dyn["error.alpha"] = float(spec.error.alpha)
-        if spec.adc.style != "fpg":
-            dyn["mapping.on_off_ratio"] = float(spec.mapping.on_off_ratio)
-        return dyn
+        return dynamic_fields_for(spec)
 
     def evaluate_group(
         self,

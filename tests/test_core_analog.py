@@ -137,3 +137,52 @@ def test_sonos_error_model_shape():
     # saturating near 0.031 at the top
     assert float(s[-1]) < 0.033
     assert bool(jnp.all(jnp.diff(s) >= -1e-9))
+
+
+# ---------------------------------------------------------------------------
+# use_pallas integration: the kernel-routed paths must match the dense
+# oracle paths through the full analog_matmul pipeline, parasitics included
+# ---------------------------------------------------------------------------
+
+
+def test_use_pallas_parasitic_fastpath_matches_dense():
+    """Design A + r_hat > 0 + calibrated ADC: the fused parasitic kernel
+    (analog_mvm_parasitic) vs the dense scan oracle, end to end."""
+    import dataclasses
+
+    spec_d = A.design_a(r_hat=1e-4, use_pallas=False)
+    spec_p = dataclasses.replace(spec_d, use_pallas=True)
+    aw = A.program(W, spec_d, jax.random.PRNGKey(5))
+    _, stats = A.analog_matmul(X, aw, spec_d, collect=True)
+    lo, hi = stats[:, 0], stats[:, 1]
+    y_d = A.analog_matmul(X, aw, spec_d, adc_lo=lo, adc_hi=hi)
+    y_p = A.analog_matmul(X, aw, spec_p, adc_lo=lo, adc_hi=hi)
+    # quantizer tolerance: isolated ADC-boundary flips only
+    lsb = float((hi[0] - lo[0]) / 255.0)
+    gain = 127.0 / (1.0 - spec_d.mapping.g_min)
+    np.testing.assert_allclose(np.asarray(y_p), np.asarray(y_d),
+                               atol=lsb * gain * float(aw.w_scale) * 1.01)
+    tight = np.isclose(np.asarray(y_p), np.asarray(y_d), rtol=1e-4).mean()
+    assert tight >= 0.95, f"only {tight:.2%} bit-close"
+
+
+@pytest.mark.parametrize("scheme,accum,bpc,rows", [
+    ("offset", "digital", 2, 72),        # sliced: _apply_line branch
+    ("differential", "digital", None, 96),
+])
+def test_use_pallas_apply_line_matches_dense(scheme, accum, bpc, rows):
+    """Non-fastpath parasitic configs route _apply_line through the Pallas
+    Thomas kernel when use_pallas is set; the dense lax.scan path is the
+    parity oracle."""
+    import dataclasses
+
+    spec = A.AnalogSpec(
+        mapping=MappingConfig(scheme=scheme, weight_bits=8,
+                              bits_per_cell=bpc),
+        adc=NONE_ADC, input_accum=accum, max_rows=rows, r_hat=1e-4,
+    )
+    aw = A.program(W, spec, jax.random.PRNGKey(6))
+    y_d = A.analog_matmul(X, aw, spec)
+    y_p = A.analog_matmul(X, aw, dataclasses.replace(spec, use_pallas=True))
+    np.testing.assert_allclose(np.asarray(y_p), np.asarray(y_d),
+                               rtol=1e-3, atol=1e-4)

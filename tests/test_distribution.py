@@ -32,7 +32,12 @@ def run_in_subprocess(body: str) -> str:
     env.pop("XLA_FLAGS", None)
     out = subprocess.run([sys.executable, "-c", code], capture_output=True,
                          text=True, env=env, timeout=600)
-    assert out.returncode == 0, f"stderr:\n{out.stderr[-4000:]}"
+    # include the stdout tail: the subprocess bodies print their diagnostics
+    # (LOSS1/LOSS2, WORST, ...) to stdout before the failing assert, and a
+    # bare AssertionError traceback in stderr is useless without them
+    assert out.returncode == 0, (
+        f"stdout tail:\n{out.stdout[-2000:]}\nstderr tail:\n{out.stderr[-4000:]}"
+    )
     return out.stdout
 
 
@@ -107,11 +112,19 @@ def test_int8_ring_allreduce_matches_psum():
         from repro.launch.mesh import make_debug_mesh
         from repro.optim.compress import ring_allreduce_int8, _quant_int8
 
+        # jax >= 0.5 exposes jax.shard_map (check_vma); 0.4.x has it under
+        # jax.experimental with the older check_rep spelling
+        if hasattr(jax, "shard_map"):
+            shard_map, check = jax.shard_map, {"check_vma": False}
+        else:
+            from jax.experimental.shard_map import shard_map
+            check = {"check_rep": False}
+
         mesh = make_debug_mesh(8, 1)
         x = jax.random.normal(jax.random.PRNGKey(0), (8, 64))
 
-        @partial(jax.shard_map, mesh=mesh, in_specs=P("data"),
-                 out_specs=P("data"), check_vma=False)
+        @partial(shard_map, mesh=mesh, in_specs=P("data"),
+                 out_specs=P("data"), **check)
         def ring(x):
             q, s = _quant_int8(x)
             return ring_allreduce_int8(q, s, "data")
@@ -136,10 +149,12 @@ def test_sharding_rules_divisibility_fallbacks():
 
         mesh = make_debug_mesh(2, 4)
         cfg = get_config("gemma-2b")
-        # ff divisible by 4 -> model sharded
+        # ff divisible by 4 -> model sharded.  A single dp axis is emitted
+        # as the bare name; jax 0.4.x does not normalize P(("data",)) to
+        # P("data"), so compare against the emitted spelling.
         spec = param_spec(cfg, _FakePath(["layers", "mlp", "w_up"]),
                           (18, 2048, 16384), mesh)
-        assert spec == P(None, ("data",), "model"), spec
+        assert spec == P(None, "data", "model"), spec
         # vocab 256000 % 4 == 0 -> model sharded
         spec = param_spec(cfg, _FakePath(["embed"]), (256000, 2048), mesh)
         assert spec == P("model", "data"), spec

@@ -46,6 +46,7 @@ def _smoke_sweeps():
     from benchmarks.fig8_9_cell_errors import (
         ALPHAS_IND, ALPHAS_PROP, fig_sweep)
     from benchmarks.fig15_16_adc import fig15_sweep, fig16_sweep
+    from benchmarks.fig19_parasitics import fig19_sweep
     from repro.core.errors import state_independent, state_proportional
 
     sweeps = [
@@ -53,6 +54,9 @@ def _smoke_sweeps():
         fig_sweep("fig9", state_proportional, ALPHAS_PROP),
         fig15_sweep(),
         fig16_sweep(),
+        # thinned Fig. 19 grid: pins the traced-r_hat bit-line solve path
+        # (scheme x r_hat, one compile group per scheme) bit-stable
+        fig19_sweep((1e-4, 1e-3), test_n=64),
     ]
     return [
         (s.name, dataclasses.replace(s, name=f"golden_{s.name}", trials=1))
@@ -75,7 +79,8 @@ def _jax_minor(version):
     return ".".join(version.split(".")[:2])
 
 
-@pytest.mark.parametrize("name", ["fig8", "fig9", "fig15", "fig16"])
+@pytest.mark.parametrize("name", ["fig8", "fig9", "fig15", "fig16",
+                                  "fig19"])
 def test_smoke_grid_matches_golden(name):
     path = _golden_path(name)
     assert os.path.exists(path), (

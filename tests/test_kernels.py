@@ -117,6 +117,10 @@ def test_analog_mvm_dtypes(dtype):
     (8, 33, 1, 5e-4),
     (4, 1152, 4, 1e-4),
     (16, 72, 8, 5e-3),
+    # padding edges: M and N off tile multiples, K not a multiple of 8
+    (3, 13, 130, 1e-4),
+    (130, 7, 5, 1e-3),
+    (9, 129, 127, 1e-4),
 ])
 def test_bitline_kernel_matches_solver(m, k, n, r):
     kx, kg = jax.random.split(jax.random.PRNGKey(k), 2)
@@ -133,14 +137,31 @@ def test_bitline_kernel_zero_r_is_ideal():
     kx, kg = jax.random.split(jax.random.PRNGKey(5), 2)
     x = jnp.sign(jax.random.normal(kx, (8, 32)))
     g = jax.random.uniform(kg, (32, 16))
-    np.testing.assert_allclose(ops.bitline_mvm(g, x, 0.0), x @ g, rtol=1e-6)
+    # every *concrete* scalar form of zero must short-circuit to the ideal
+    # matmul — running the Thomas sweep at r=0 divides into silent NaNs
+    for zero in (0.0, 0, np.float32(0.0), jnp.float32(0.0),
+                 jnp.zeros(())):
+        np.testing.assert_allclose(ops.bitline_mvm(g, x, zero), x @ g,
+                                   rtol=1e-6)
+        np.testing.assert_allclose(bitline_currents(g, x, zero), x @ g,
+                                   rtol=1e-6)
+    from repro.core.analog import AnalogSpec
+
+    assert not AnalogSpec(r_hat=np.float32(0.0)).parasitics_on
+    assert AnalogSpec(r_hat=np.float32(1e-4)).parasitics_on
 
 
-def test_bitline_vs_dense_oracle():
+@pytest.mark.parametrize("m,k,n,r", [
+    (4, 23, 6, 2e-3),
+    # padded/edge shapes through the dense jnp.linalg.solve oracle too:
+    # M/N off tile multiples, K not a multiple of 8
+    (3, 13, 9, 1e-3),
+    (5, 130, 2, 1e-4),
+])
+def test_bitline_vs_dense_oracle(m, k, n, r):
     """Thomas-in-kernel vs dense jnp.linalg.solve, element by element."""
     from repro.core.parasitics import bitline_voltages_dense
 
-    m, k, n, r = 4, 23, 6, 2e-3
     kx, kg = jax.random.split(jax.random.PRNGKey(7), 2)
     x = jnp.sign(jax.random.normal(kx, (m, k))) * (
         jax.random.uniform(jax.random.PRNGKey(8), (m, k)) > 0.3
@@ -151,3 +172,122 @@ def test_bitline_vs_dense_oracle():
         for nn in range(n):
             v = bitline_voltages_dense(g[:, nn], x[mm], r)
             np.testing.assert_allclose(y_k[mm, nn], v[-1] / r, rtol=1e-4)
+
+
+def test_bitline_traced_r_hat_one_compilation():
+    """``r_hat`` is a kernel *input*: one jitted function serves every
+    parasitic level (the sweep engine's Fig. 19 batching contract)."""
+    m, k, n = 8, 33, 7
+    kx, kg = jax.random.split(jax.random.PRNGKey(11), 2)
+    x = jnp.sign(jax.random.normal(kx, (m, k)))
+    g = jax.random.uniform(kg, (k, n))
+    traces = []
+
+    @jax.jit
+    def f(r):
+        traces.append(1)
+        return ops.bitline_mvm(g, x, r)
+
+    for r in (1e-5, 1e-4, 1e-3):
+        np.testing.assert_allclose(
+            f(jnp.float32(r)), bitline_currents(g, x, r),
+            rtol=1e-4, atol=1e-6)
+    assert len(traces) == 1, "r_hat retraced the kernel"
+
+
+def test_bitline_vmap_over_slices_partitions():
+    """The core parasitic branch vmaps the kernel over (slice, partition)
+    stacks; pin the batching rule."""
+    p_, m, k, n = 3, 6, 24, 5
+    gs = jax.random.uniform(jax.random.PRNGKey(3), (p_, k, n))
+    xs = jnp.sign(jax.random.normal(jax.random.PRNGKey(4), (p_, m, k)))
+    out = jax.vmap(lambda g, x: ops.bitline_mvm(g, x, 1e-4))(gs, xs)
+    want = jnp.stack([bitline_currents(gs[i], xs[i], 1e-4)
+                      for i in range(p_)])
+    np.testing.assert_allclose(out, want, rtol=1e-4, atol=1e-6)
+
+
+PARASITIC_SHAPES = [
+    (8, 1, 16, 8),
+    (16, 2, 33, 7),      # K not a multiple of 8, tiny N
+    (8, 2, 8, 130),      # N just over one lane tile
+    (130, 1, 72, 24),    # M off tile multiple
+]
+
+
+@pytest.mark.parametrize("m,p,rows,n", PARASITIC_SHAPES)
+def test_analog_mvm_parasitic_matches_ref(m, p, rows, n):
+    ks = jax.random.split(jax.random.PRNGKey(m * 3 + rows), 3)
+    x = jnp.clip(jnp.round(jax.random.normal(ks[0], (m, p, rows)) * 40),
+                 -127, 127).astype(jnp.float32)
+    gp = jax.random.uniform(ks[1], (p, rows, n)) * 0.1
+    gm = jax.random.uniform(ks[2], (p, rows, n)) * 0.1
+    lo, hi = jnp.float32(-50.0), jnp.float32(50.0)
+    gain = 127.0
+    args = dict(r_hat=1e-3, n_bits=7, adc_lo=lo, adc_hi=hi, adc_bits=8,
+                gain=gain)
+    y_k = ops.analog_mvm_parasitic(x, gp, gm, **args)
+    y_r = ref.analog_mvm_parasitic_diff(x, gp, gm, **args)
+    lsb = 100.0 / 255.0
+    quantizer_allclose(y_k, y_r, flip_atol=lsb * gain * p)
+
+
+def test_analog_mvm_parasitic_traced_r_hat():
+    """The fused Design-A parasitic kernel also takes r_hat as a traced
+    scalar — one compiled program across the Fig. 19 axis."""
+    m, p, rows, n = 8, 1, 24, 9
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    x = jnp.clip(jnp.round(jax.random.normal(ks[0], (m, p, rows)) * 40),
+                 -127, 127).astype(jnp.float32)
+    gp = jax.random.uniform(ks[1], (p, rows, n)) * 0.1
+    gm = jax.random.uniform(ks[2], (p, rows, n)) * 0.1
+    kw = dict(n_bits=7, adc_lo=jnp.float32(-50.0), adc_hi=jnp.float32(50.0),
+              adc_bits=8, gain=127.0)
+    f = jax.jit(lambda r: ops.analog_mvm_parasitic(x, gp, gm, r_hat=r, **kw))
+    for r in (1e-5, 1e-3):
+        np.testing.assert_allclose(
+            f(jnp.float32(r)),
+            ref.analog_mvm_parasitic_diff(x, gp, gm, r_hat=r, **kw),
+            rtol=1e-3, atol=100.0 / 255.0 * 127.0)
+
+
+def test_pick_tile_lane_dim_is_full_tile():
+    """Mosaic requires 128-lane tiles: the N (lane) tile must never shrink
+    to a sublane-rounded size, however small N is (interpret mode hides
+    the violation; TPU compilation does not)."""
+    for n in (1, 3, 7, 64, 127):
+        assert ops._pick_tile(n, 128, lane=True) == 128, n
+    assert ops._pick_tile(200, 128, lane=True) == 128
+    # sublane behavior unchanged
+    assert ops._pick_tile(3, 128) == 8
+    assert ops._pick_tile(33, 128) == 40
+    assert ops._pick_tile(200, 128) == 128
+
+
+@pytest.mark.parametrize("n", [1, 3, 5])
+def test_analog_mvm_small_lane_shapes(n):
+    """Tiny-N outputs exercise the lane-padded (bn=128) path in all three
+    wrapper entry points."""
+    m, p, rows = 8, 2, 40
+    ks = jax.random.split(jax.random.PRNGKey(n), 3)
+    x = jnp.round(jax.random.normal(ks[0], (m, p, rows)) * 40)
+    gp = jax.random.uniform(ks[1], (p, rows, n)) * 0.1
+    gm = jax.random.uniform(ks[2], (p, rows, n)) * 0.1
+    lo, hi = jnp.float32(-50.0), jnp.float32(50.0)
+    args = dict(adc_lo=lo, adc_hi=hi, adc_bits=8, gain=127.0)
+    lsb = 100.0 / 255.0
+
+    # frac: with only m*n <= 40 outputs, one boundary-straddling sample row
+    # is >10% of the output — the flip_atol bound is the real contract here
+    y = ops.analog_mvm(x, gp, gm, **args)
+    quantizer_allclose(y, ref.analog_mvm_diff(x, gp, gm, **args),
+                       flip_atol=lsb * 127.0 * p, frac=0.8)
+    y = ops.analog_mvm_bitserial(x, gp, gm, n_bits=7, **args)
+    quantizer_allclose(
+        y, ref.analog_mvm_bitserial(x, gp, gm, n_bits=7, **args),
+        flip_atol=lsb * 127.0 * p * 2 ** 7, frac=0.8)
+    xs = jnp.sign(jax.random.normal(ks[0], (m, rows)))
+    g = jax.random.uniform(ks[1], (rows, n))
+    np.testing.assert_allclose(
+        ops.bitline_mvm(g, xs, 1e-4), bitline_currents(g, xs, 1e-4),
+        rtol=1e-4, atol=1e-5)

@@ -126,6 +126,49 @@ def test_constant_dynamic_field_stays_static(vehicle):
         assert dyn_names == ()        # alpha/on_off constant -> not dynamic
 
 
+def test_r_hat_axis_is_one_compile_group(vehicle):
+    """The Fig. 19 parasitic axis batches as a traced scalar: every
+    ``r_hat > 0`` level shares one compiled program (the tridiagonal solve
+    is structurally identical), instead of one compile group per level."""
+    ev = _evaluator(vehicle)
+    sweep = SweepSpec(
+        name="t",
+        base=AnalogSpec(adc=ADCConfig(style="none"), max_rows=64),
+        axes=(Axis("r_hat", (1e-5, 1e-4, 1e-3)),),
+        trials=1,
+    )
+    pts = sweep.expand()
+    groups = compile_groups(
+        [(point_key(ev.signature(), p, sweep.point_protocol()), p)
+         for p in pts], ev)
+    assert len(groups) == 1
+    _, dyn_names, members = groups[0]
+    assert "r_hat" in dyn_names
+    assert len(members) == 3
+
+
+def test_r_hat_on_off_split_is_static(vehicle):
+    """``r_hat == 0`` is a different compiled program (no solve in the
+    graph): it must land in its own group, never be traced to zero."""
+    ev = _evaluator(vehicle)
+    sweep = SweepSpec(
+        name="t",
+        base=AnalogSpec(adc=ADCConfig(style="none"), max_rows=64),
+        axes=(Axis("r_hat", (0.0, 1e-4, 1e-3)),),
+        trials=1,
+    )
+    pts = sweep.expand()
+    groups = compile_groups(
+        [(point_key(ev.signature(), p, sweep.point_protocol()), p)
+         for p in pts], ev)
+    assert len(groups) == 2
+    by_dyn = {dyn_names: members for _, dyn_names, members in groups}
+    off = [names for names in by_dyn if "r_hat" not in names]
+    on = [names for names in by_dyn if "r_hat" in names]
+    assert len(off) == 1 and len(by_dyn[off[0]]) == 1
+    assert len(on) == 1 and len(by_dyn[on[0]]) == 2
+
+
 # ---------------------------------------------------------------------------
 # vectorized == serial
 # ---------------------------------------------------------------------------
@@ -153,6 +196,33 @@ def test_vectorized_matches_serial_bitexact_no_adc(vehicle):
     for r in res:
         _, _, accs = serial_accuracy(
             layers, pts[r.index].spec, xca, xte, yte, trials=3, seed=7)
+        np.testing.assert_array_equal(np.asarray(r.values), np.asarray(accs))
+
+
+def test_vectorized_matches_serial_fig19_r_hat_axis(vehicle):
+    """Fig. 19 at engine scale: the whole parasitic axis runs as one
+    compile group with ``r_hat`` traced, and still reproduces the serial
+    per-point loop bit-exactly (ADC-free path)."""
+    layers, xca, xte, yte = vehicle
+    sweep = SweepSpec(
+        name="t",
+        base=AnalogSpec(
+            mapping=MappingConfig(scheme="differential", on_off_ratio=1e4),
+            adc=ADCConfig(style="none"),
+            error=state_proportional(0.02),
+            input_accum="analog",
+            max_rows=64,
+        ),
+        axes=(Axis("r_hat", (1e-5, 1e-4, 1e-3)),),
+        trials=2,
+        seed=7,
+    )
+    res = run_sweep(sweep, _evaluator(vehicle))
+    pts = sweep.expand()
+    assert len(res) == 3
+    for r in res:
+        _, _, accs = serial_accuracy(
+            layers, pts[r.index].spec, xca, xte, yte, trials=2, seed=7)
         np.testing.assert_array_equal(np.asarray(r.values), np.asarray(accs))
 
 
