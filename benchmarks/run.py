@@ -9,10 +9,12 @@ the run, e.g. ``python -m benchmarks.run lm_accuracy --smoke``.
 
 ``--smoke`` is the CI fast path: the Fig. 10 On/Off sweep (a single
 compile group exercising the whole vectorized engine), the Fig. 19
-parasitic grid (the traced-``r_hat`` bit-line solve path), plus the LM
+parasitic grid (the traced-``r_hat`` bit-line solve path), the LM
 serving sweeps (``lm_accuracy`` — program → calibrate → serve end to
-end, including the serving-scale parasitic axis), one programming trial
-per point, fresh (uncached) evaluation.
+end, including the serving-scale parasitic axis), and the serving
+runtime (``servebench`` — continuous vs static batching, with the
+runtime-vs-``decode_lm`` agreement gate); one programming trial per
+point, fresh (uncached) evaluation.
 """
 
 import argparse
@@ -31,11 +33,13 @@ MODULES = [
     "table3_energy",
     "table4_sonos",
     "lm_accuracy",
+    "servebench",
     "kernelbench",
     "roofline",
 ]
 
-SMOKE_MODULES = ["fig10_onoff", "fig19_parasitics", "lm_accuracy"]
+SMOKE_MODULES = ["fig10_onoff", "fig19_parasitics", "lm_accuracy",
+                 "servebench"]
 
 
 def main() -> None:

@@ -1,0 +1,156 @@
+"""Continuous vs static batching of the analog LM (`repro.serve.runtime`).
+
+The serving-system benchmark: the trained smoke LM is programmed and
+calibrated once (Design A + state-proportional cell error — a valid
+sweep design point, served), then a mixed-length request trace is
+drained twice through the same jitted slot machinery:
+
+  * **continuous** — iteration-level scheduling: slots refill the moment
+    a request retires (``ServeRuntime``);
+  * **static** — gang scheduling: admit a full batch, pad every prompt
+    to one bucket, drain until the *longest* request finishes
+    (``ServeRuntime(gang=True)``) — classic static batching.
+
+Reported per mode: tokens/s, mean time-to-first-token, slot occupancy,
+decode-step/prefill-call counts.  Two claims are *gated* (the benchmark
+raises, and ``benchmarks.run`` exits nonzero, when they fail):
+
+  * continuous-batching throughput >= 1.5x static on the mixed trace at
+    equal analog config;
+  * runtime-vs-``decode_lm`` greedy token agreement == 1.0 — scheduling
+    must never change what the model says
+    (``repro.sweep.serve_eval.runtime_agreement``).
+
+Both modes pay identical per-step costs (same compiled decode/prefill
+programs), so the speedup isolates the *scheduling* difference: static
+batches burn ``max(max_new)`` steps per gang while continuous burns
+``~sum(max_new)/max_slots``.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core import analog as A
+from repro.core import errors as E
+from repro.serve import ServeRuntime, calibrate_lm, program_lm
+from repro.sweep.serve_eval import runtime_agreement
+
+from benchmarks.common import Timer, emit
+from benchmarks.lm_accuracy import CALIB_STEP, trained_lm
+
+MAX_SLOTS = 8
+MAX_LEN = 80
+BUCKETS = (8, 16)
+#: long-tail generation budget — the static scheduler pads every gang to it
+TAIL_NEW = 64
+
+
+def request_trace(n: int, vocab: int, seed: int = 0):
+    """A mixed-length offline trace: prompts 3..14 tokens, generation
+    budgets heavy-tailed (one TAIL_NEW-token request per MAX_SLOTS
+    arrivals, the rest 2..6) — the regime where gang scheduling burns
+    ``max(max_new)`` decode steps per batch while continuous batching
+    burns ``~sum(max_new) / max_slots``."""
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n):
+        plen = int(rng.integers(3, 15))
+        n_new = TAIL_NEW if i % MAX_SLOTS == 0 else int(rng.integers(2, 7))
+        prompt = rng.integers(0, vocab, size=plen).astype(np.int32)
+        reqs.append((prompt, n_new))
+    return reqs
+
+
+def serve_pack(cfg, params, ds):
+    """Program + calibrate the benchmark's analog design point."""
+    spec = A.design_a(error=E.state_proportional(0.02))
+    pack = program_lm(cfg, params, spec, jax.random.PRNGKey(7))
+    return calibrate_lm(cfg, params, pack, ds.batch(CALIB_STEP)["tokens"])
+
+
+def drain(rt: ServeRuntime, reqs) -> dict:
+    """Submit the whole trace, drain it, and return timing + stats."""
+    for i, (prompt, n_new) in enumerate(reqs):
+        rt.submit(prompt, max_new_tokens=n_new, uid=i)
+    t0 = time.perf_counter()
+    outs = rt.run()
+    wall = time.perf_counter() - t0
+    s = rt.stats
+    assert len(outs) == len(reqs)
+    return {
+        "wall_s": wall,
+        "tokens": s["tokens_out"],
+        "tok_per_s": s["tokens_out"] / wall,
+        "ttft_ms": 1e3 * float(np.mean(s["ttft_s"])),
+        "occupancy": s["occupancy"],
+        "steps": s["decode_steps"],
+        "prefills": s["prefill_calls"],
+    }
+
+
+def bench_mode(cfg, params, pack, reqs, *, gang: bool) -> dict:
+    """Throughput and TTFT as separate passes: the TTFT pass blocks on
+    each prefill's results (true submit->first-token wall time), which
+    defeats dispatch pipelining — so tokens/s comes from a non-blocking
+    pass over the same schedule."""
+    rt = ServeRuntime(cfg, params, pack=pack, max_slots=MAX_SLOTS,
+                      max_len=MAX_LEN, buckets=BUCKETS, gang=gang)
+    drain(rt, reqs)                      # warm: compile every (bucket, G)
+    runs = []
+    for _ in range(2):                   # timed: best of 2 damps CI noise
+        rt.reset()
+        runs.append(drain(rt, reqs))
+    r = min(runs, key=lambda x: x["wall_s"])
+    rt.reset()
+    rt.measure_ttft = True               # latency pass, same compiled fns
+    r["ttft_ms"] = drain(rt, reqs)["ttft_ms"]
+    return r
+
+
+def main(timer: Timer):
+    from benchmarks import common
+
+    n_requests = 24 if common.SMOKE else 48
+    cfg, ds, params = trained_lm()
+    pack = serve_pack(cfg, params, ds)
+    reqs = request_trace(n_requests, cfg.vocab)
+
+    rows = {}
+    for mode, gang in (("continuous", False), ("static", True)):
+        r = rows[mode] = bench_mode(cfg, params, pack, reqs, gang=gang)
+        emit(f"servebench_{mode}", r["wall_s"] * 1e6 / r["tokens"],
+             f"tok/s={r['tok_per_s']:.1f} ttft_ms={r['ttft_ms']:.1f} "
+             f"occupancy={r['occupancy']:.2f} steps={r['steps']} "
+             f"prefills={r['prefills']}")
+
+    speedup = rows["continuous"]["tok_per_s"] / rows["static"]["tok_per_s"]
+    step_ratio = ((rows["static"]["steps"] + rows["static"]["prefills"])
+                  / (rows["continuous"]["steps"]
+                     + rows["continuous"]["prefills"]))
+    emit("servebench_claim_continuous_speedup", 0.0,
+         f"tok/s ratio={speedup:.2f} step ratio={step_ratio:.2f} "
+         f"(>=1.5 required): {speedup >= 1.5}")
+
+    # agreement gate: the runtime must say exactly what decode_lm says,
+    # token for token, at the same analog config (few distinct shapes to
+    # bound eager decode_lm reference cost)
+    agree_reqs = [(reqs[i][0][:6], 5) for i in range(0, 6)] \
+        + [(reqs[6][0][:12], 8)]
+    agreement = runtime_agreement(cfg, params, agree_reqs, pack=pack,
+                                  max_slots=MAX_SLOTS, max_len=MAX_LEN,
+                                  buckets=BUCKETS)
+    emit("servebench_agreement", 0.0,
+         f"runtime-vs-decode_lm greedy agreement={agreement:.4f}")
+
+    if agreement != 1.0:
+        raise RuntimeError(
+            f"continuous-batching runtime diverged from decode_lm: "
+            f"agreement {agreement} != 1.0")
+    if speedup < 1.5:
+        raise RuntimeError(
+            f"continuous batching speedup {speedup:.2f}x < 1.5x over "
+            f"static batching (step ratio {step_ratio:.2f})")

@@ -83,8 +83,18 @@ def attention_block(
         new_cache = {"k": k, "v": v}
     else:
         # decode: insert the new token(s) at cache_len, attend over the cache
-        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, cache_len, 1)
-        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, cache_len, 1)
+        if getattr(cache_len, "ndim", 0):
+            # per-slot fills (continuous batching): each row writes its
+            # token(s) at its own offset via a batched scatter
+            rows = jnp.arange(b)[:, None]
+            pos = cache_len[:, None] + jnp.arange(s)[None, :]
+            ck = cache["k"].at[rows, pos].set(k)
+            cv = cache["v"].at[rows, pos].set(v)
+        else:
+            ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k,
+                                                     cache_len, 1)
+            cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v,
+                                                     cache_len, 1)
         out = streaming_attention(
             q, ck, cv, q_offset=cache_len, causal=causal, window=window,
             kv_len=cache_len + s,

@@ -164,14 +164,20 @@ def streaming_attention(
     k: jax.Array,                # (B, Skv, KV, hd)
     v: jax.Array,                # (B, Skv, KV, hd)
     *,
-    q_offset,                    # scalar: absolute position of q[0]
+    q_offset,                    # absolute position of q[0]: scalar or (B,)
     causal: bool = True,
     window: Optional[int] = None,
-    kv_len=None,                 # dynamic valid KV length (cache decode)
+    kv_len=None,                 # dynamic valid KV length: scalar or (B,)
     chunk: int = 1024,
     scale: Optional[float] = None,
 ) -> jax.Array:
-    """GQA attention with an online-softmax scan over KV chunks."""
+    """GQA attention with an online-softmax scan over KV chunks.
+
+    ``q_offset`` / ``kv_len`` may be per-row ``(B,)`` vectors — the
+    continuous-batching decode path, where every slot sits at its own
+    cache fill.  The scalar path (shared offset) lowers to the exact same
+    ops as before, so single-request serving is bit-identical.
+    """
     b, sq, h, hd = q.shape
     _, skv, kv_heads, _ = k.shape
     g = h // kv_heads
@@ -189,23 +195,26 @@ def streaming_attention(
     vc = jnp.moveaxis(vc, 1, 0)
 
     qg = q.reshape(b, sq, kv_heads, g, hd).astype(jnp.float32) * scale
-    q_pos = q_offset + jnp.arange(sq)
+    # (sq,) for a shared scalar offset, (B, sq) for per-row offsets
+    q_pos = jnp.asarray(q_offset)[..., None] + jnp.arange(sq)
 
     def body(carry, inp):
         m, l, acc = carry
         j, k_j, v_j = inp
         k_pos = j * chunk + jnp.arange(chunk)
         s = jnp.einsum("bqkgd,bckd->bkgqc", qg, k_j.astype(jnp.float32))
-        mask = jnp.ones((sq, chunk), bool)
+        mask = jnp.ones(q_pos.shape + (chunk,), bool)   # (..., sq, chunk)
         if causal:
-            mask &= k_pos[None, :] <= q_pos[:, None]
+            mask &= k_pos <= q_pos[..., None]
         if window is not None:
-            mask &= k_pos[None, :] > q_pos[:, None] - window
+            mask &= k_pos > q_pos[..., None] - window
         if kv_len is not None:
-            mask &= (k_pos < kv_len)[None, :]
+            mask &= k_pos < jnp.asarray(kv_len)[..., None, None]
         if pad:
-            mask &= (k_pos < skv)[None, :]
-        s = jnp.where(mask[None, None, None], s, NEG_INF)
+            mask &= k_pos < skv
+        # broadcast onto s: (b, KV, g, sq, chunk)
+        mask = mask[None, None, None] if mask.ndim == 2 else mask[:, None, None]
+        s = jnp.where(mask, s, NEG_INF)
         m_chunk = jnp.max(s, axis=-1)                        # (b,k,g,q)
         m_new = jnp.maximum(m, m_chunk)
         corr = jnp.exp(m - m_new)

@@ -20,6 +20,12 @@ class ModelApi:
     # -> (B, n_new) tokens; None for families without one (encoder-decoder
     # needs per-utterance encoder state, see repro.models.encdec)
     decode_loop: Optional[Callable] = None
+    # continuous-batching support (repro.serve.runtime): variable-length
+    # right-padded prefill + slot-wise cache insert/evict; None for
+    # families without them
+    prefill_ragged: Optional[Callable] = None
+    cache_slot_insert: Optional[Callable] = None
+    cache_slot_evict: Optional[Callable] = None
 
 
 _TRANSFORMER = ModelApi(
@@ -29,6 +35,9 @@ _TRANSFORMER = ModelApi(
     decode_step=transformer.decode_step,
     init_cache=transformer.init_cache,
     decode_loop=transformer.greedy_decode,
+    prefill_ragged=transformer.prefill_ragged,
+    cache_slot_insert=transformer.cache_slot_insert,
+    cache_slot_evict=transformer.cache_slot_evict,
 )
 
 _HYBRID = ModelApi(
@@ -48,10 +57,28 @@ _ENCDEC = ModelApi(
 )
 
 
+# dense / moe / vlm / ssm(rwkv) all run on the unified transformer
+_BY_FAMILY = {
+    "audio": _ENCDEC,
+    "hybrid": _HYBRID,
+    "dense": _TRANSFORMER,
+    "moe": _TRANSFORMER,
+    "vlm": _TRANSFORMER,
+    "ssm": _TRANSFORMER,
+}
+
+
+def families_with(attr: str) -> tuple:
+    """Families whose ModelApi provides ``attr`` — derived from the
+    registry so user-facing error messages can't drift from it."""
+    return tuple(sorted(f for f, api in _BY_FAMILY.items()
+                        if getattr(api, attr) is not None))
+
+
+def decode_loop_families() -> tuple:
+    """Families with the batched serving decode loop (repro.serve)."""
+    return families_with("decode_loop")
+
+
 def get_model(cfg: ModelConfig) -> ModelApi:
-    if cfg.family == "audio":
-        return _ENCDEC
-    if cfg.family == "hybrid":
-        return _HYBRID
-    # dense / moe / vlm / ssm(rwkv) all run on the unified transformer
-    return _TRANSFORMER
+    return _BY_FAMILY.get(cfg.family, _TRANSFORMER)

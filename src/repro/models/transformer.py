@@ -308,18 +308,102 @@ def decode_step(
     *,
     pack: Optional[AnalogPack] = None,
 ) -> Tuple[jax.Array, dict]:
-    """One decode step with a KV/state cache."""
+    """One decode step with a KV/state cache.
+
+    ``cache["len"]`` may be a scalar (all rows at the same fill — the
+    ``greedy_decode`` path) or a per-row ``(B,)`` vector (continuous
+    batching: every slot at its own fill, see ``repro.serve.runtime``).
+    """
     dtype = jnp.dtype(cfg.dtype)
     cp = cast_params(params, dtype)
     x = _embed(cfg, cp, token, None, dtype)
     t = cache["len"]
-    positions = t + jnp.arange(1)[None, :]
+    positions = (t[:, None] if getattr(t, "ndim", 0) else t) \
+        + jnp.arange(1)[None, :]
     x, new_cache, _ = _scan_layers(
         cfg, cp, x, positions=positions, cache=cache["layers"], cache_len=t,
         pack=pack, remat=False,
     )
     logits = _head(cfg, cp, x, pack)
     return logits, {"layers": new_cache, "len": t + 1}
+
+
+def prefill_ragged(
+    cfg: ModelConfig,
+    params: dict,
+    tokens: jax.Array,                 # (B, S_bucket) right-padded prompts
+    *,
+    true_lens: jax.Array,              # (B,) real prompt lengths
+    prefix_embeds: Optional[jax.Array] = None,
+    pack: Optional[AnalogPack] = None,
+) -> Tuple[jax.Array, dict]:
+    """Variable-length prefill for continuous batching.
+
+    ``tokens`` is a right-padded prompt batch; ``true_lens`` gives each
+    row's real length.  Returns per-row logits at position
+    ``true_lens - 1`` (shape (B, 1, V)) and a cache whose ``len`` is the
+    ``(B,)`` vector ``true_lens``.  Pad positions do hold K/V entries,
+    but they sit at indices >= the row's fill: decode's ``kv_len`` mask
+    never attends to them, and the slot's own decode tokens progressively
+    overwrite them — so a padded row serves bit-identically to an
+    unpadded one (causality: its last real token never sees the pads).
+    """
+    if cfg.rwkv:
+        raise ValueError(
+            "prefill_ragged does not support the rwkv family: the "
+            "recurrent state folds right-pad tokens into every row; "
+            "serve rwkv prompts at exact length via prefill() instead")
+    b, s = tokens.shape
+    dtype = jnp.dtype(cfg.dtype)
+    cp = cast_params(params, dtype)
+    x = _embed(cfg, cp, tokens, prefix_embeds, dtype)
+    positions = jnp.arange(s)
+    x, new_cache, _ = _scan_layers(
+        cfg, cp, x, positions=positions, cache=None, cache_len=None,
+        pack=pack, remat=False,
+    )
+    true_lens = jnp.asarray(true_lens, jnp.int32)
+    last = jnp.take_along_axis(x, (true_lens - 1)[:, None, None], axis=1)
+    logits = _head(cfg, cp, last, pack)
+    return logits, {"layers": new_cache, "len": true_lens}
+
+
+def cache_slot_insert(slot_cache: dict, new_cache: dict,
+                      slots: jax.Array) -> dict:
+    """Insert freshly-prefilled request rows into a running slot cache.
+
+    Both caches are ``{"layers": ..., "len": ...}`` dicts; slot leaves
+    are ``(L, max_slots, S_max, ...)``, new leaves ``(L, G, s, ...)``
+    with ``s <= S_max`` (the seq axis is zero-padded up to the slot
+    shape).  ``slots`` (G,) names the destination slot per row;
+    out-of-range ids are dropped, which is how the runtime pads
+    admission groups to fixed compile shapes (dummy rows get
+    ``slots == max_slots``).
+    """
+    def insert(dst, src):
+        src = src.astype(dst.dtype)
+        pad = [(0, 0)] * src.ndim
+        for ax in range(2, src.ndim):
+            pad[ax] = (0, dst.shape[ax] - src.shape[ax])
+        if any(p != (0, 0) for p in pad):
+            src = jnp.pad(src, pad)
+        return dst.at[:, slots].set(src, mode="drop")
+
+    layers = jax.tree.map(insert, slot_cache["layers"], new_cache["layers"])
+    length = slot_cache["len"].at[slots].set(
+        jnp.asarray(new_cache["len"], slot_cache["len"].dtype), mode="drop")
+    return {"layers": layers, "len": length}
+
+
+def cache_slot_evict(slot_cache: dict, slots: jax.Array) -> dict:
+    """Zero freed slot rows (hygiene only — the runtime's per-slot
+    ``kv_len`` masking already makes evicted data unreachable)."""
+    layers = jax.tree.map(
+        lambda dst: dst.at[:, slots].set(
+            jnp.zeros((), dst.dtype), mode="drop"),
+        slot_cache["layers"])
+    length = slot_cache["len"].at[slots].set(0, mode="drop")
+    return {"layers": layers, "len": length}
 
 
 def greedy_decode(
@@ -338,7 +422,8 @@ def greedy_decode(
     included — lowers to a single compiled program.  Returns the
     (B, n_new) generated tokens.
     """
-    assert n_new >= 1, n_new
+    if n_new < 1:
+        raise ValueError(f"greedy_decode needs n_new >= 1, got {n_new}")
     b, s = prompts.shape
     # the first generated token comes from the prefill logits, so only
     # n_new - 1 decode steps (and cache slots) are needed

@@ -1,0 +1,37 @@
+"""Serve a trained LM analogly: program + calibrate (``analog_engine``),
+one-shot batched decode (``decode_lm``), and the continuous-batching
+request runtime (``runtime``)."""
+
+from repro.serve.analog_engine import (
+    analog_eval_loss,
+    analog_eval_metrics,
+    calibrate_lm,
+    decode_lm,
+    lm_program_codes,
+    program_lm,
+    program_lm_from_codes,
+)
+from repro.serve.runtime import (
+    Completion,
+    SamplerConfig,
+    ServeRuntime,
+    SlotState,
+    request_key,
+    sample_tokens,
+)
+
+__all__ = [
+    "analog_eval_loss",
+    "analog_eval_metrics",
+    "calibrate_lm",
+    "decode_lm",
+    "lm_program_codes",
+    "program_lm",
+    "program_lm_from_codes",
+    "Completion",
+    "SamplerConfig",
+    "ServeRuntime",
+    "SlotState",
+    "request_key",
+    "sample_tokens",
+]

@@ -119,6 +119,12 @@ def lm_program_codes(cfg: ModelConfig, params: dict, spec: AnalogSpec,
     """
     groups = RWKV_NAMES if cfg.rwkv else DENSE_NAMES
     codes: Dict[str, ProgrammedMatrix] = {}
+    if "layers" not in params:
+        raise ValueError(
+            f"family {cfg.family!r} ({cfg.name}) has no 'layers' parameter "
+            f"stack; lm_program_codes supports the unified transformer "
+            f"families (dense / moe / vlm / ssm-rwkv) — see DESIGN.md "
+            f"§Arch-applicability")
     cp = params["layers"]
     for parent, leaves in groups.items():
         for leaf in leaves:
@@ -127,6 +133,12 @@ def lm_program_codes(cfg: ModelConfig, params: dict, spec: AnalogSpec,
             name = HOOK_NAME[(parent, leaf)]
             w_stack = cp[parent][leaf].astype(jnp.float32)
             codes[name] = jax.vmap(lambda w: program_codes(w, spec))(w_stack)
+    if not codes:
+        raise ValueError(
+            f"no analog hooks found for family {cfg.family!r} ({cfg.name}): "
+            f"expected {'rwkv' if cfg.rwkv else 'attn/mlp'} projection "
+            f"leaves {sorted(n for g in groups.values() for n in g)} under "
+            f"params['layers']")
     if include_head:
         w = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
         codes[HEAD] = program_codes(w.astype(jnp.float32), spec)
@@ -252,6 +264,12 @@ def decode_lm(cfg: ModelConfig, params: dict, prompts: jax.Array,
     the LM sweeps measure via ``decode_match``.
     """
     api = get_model(cfg)
-    assert api.decode_loop is not None, (
-        f"family {cfg.family!r} has no batched decode loop")
+    if api.decode_loop is None:
+        from repro.models.registry import decode_loop_families
+
+        raise ValueError(
+            f"family {cfg.family!r} ({cfg.name}) has no batched decode "
+            f"loop; decode_lm serves families "
+            f"{sorted(decode_loop_families())} (encoder-decoder needs "
+            f"per-utterance encoder state, see repro.models.encdec)")
     return api.decode_loop(cfg, params, prompts, n_new, pack=pack)

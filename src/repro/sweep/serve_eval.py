@@ -202,6 +202,50 @@ class ServeEvaluator:
         return fn
 
 
+def runtime_agreement(
+    cfg: ModelConfig,
+    params: dict,
+    requests: Sequence[Tuple[Any, int]],
+    *,
+    pack=None,
+    max_slots: int = 4,
+    max_len: Optional[int] = None,
+    buckets: Optional[Sequence[int]] = None,
+    seed: int = 0,
+) -> float:
+    """``decode_match``'s runtime sibling: greedy token agreement between
+    the continuous-batching runtime and per-request ``decode_lm``.
+
+    ``requests`` is a list of ``(prompt tokens, max_new)`` pairs with
+    arbitrary (mixed) prompt lengths.  Each request is served twice at
+    the same analog config: once through :class:`repro.serve.ServeRuntime`
+    (slot-scheduled, bucket-padded, interleaved with whatever else is in
+    flight) and once through the one-shot ``decode_lm`` reference
+    (exact-length prompt, dedicated batch).  Returns the fraction of
+    generated tokens that agree — the contract value is 1.0: scheduling
+    must never change what the model says (pinned by
+    ``tests/test_runtime.py`` and gated in ``benchmarks/servebench.py``).
+    """
+    from repro.serve.runtime import ServeRuntime
+
+    prompts = [np.asarray(p, np.int32).reshape(-1) for p, _ in requests]
+    n_new = [int(n) for _, n in requests]
+    if max_len is None:
+        max_len = max(p.size + n for p, n in zip(prompts, n_new))
+    rt = ServeRuntime(cfg, params, pack=pack, max_slots=max_slots,
+                      max_len=max_len, buckets=buckets, seed=seed)
+    uids = [rt.submit(p, max_new_tokens=n) for p, n in zip(prompts, n_new)]
+    outs = rt.run()
+    agree = total = 0
+    for uid, p, n in zip(uids, prompts, n_new):
+        ref = np.asarray(decode_lm(cfg, params, jnp.asarray(p)[None, :], n,
+                                   pack=pack))[0]
+        got = outs[uid]
+        total += n
+        agree += int(np.sum(got[:ref.size] == ref[:got.size]))
+    return agree / max(total, 1)
+
+
 def serve_serial_reference(
     cfg: ModelConfig,
     params: dict,
