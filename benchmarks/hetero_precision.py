@@ -1,0 +1,158 @@
+"""Heterogeneous per-site precision: the Fig. 15/16 ADC-resolution story,
+but *per layer class* of a served LM.
+
+The paper's closing argument is that proportional mapping lets designers
+"match the precision of the hardware to the needs of the algorithm".
+With ``repro.hw.Profile`` that is finally expressible: this benchmark
+sweeps attention-class ADC bits × MLP-class ADC bits (lm_head kept
+digital — the ``digital`` fallback in action) over the trained smoke LM,
+served end to end per design point (``program → calibrate → serve →
+decode``, ``repro.sweep.ServeEvaluator``), and reports the cheapest
+mixed-precision design whose loss matches the uniform 8-bit baseline.
+
+Claims:
+
+* **gated** — at least one mixed design with ≥1 fewer ADC bit on at
+  least one layer class matches the uniform-8-bit loss within the
+  ``tests/test_system.py`` tolerance (``loss < uniform * 1.35 + 0.2``);
+  the benchmark raises (and ``benchmarks.run`` exits nonzero) otherwise.
+* The mixed grid stays cheap to compile: every (attn bits, mlp bits)
+  cell is one profile signature = one compile group, with the cell-error
+  axis batched as a traced scalar inside it (pinned by
+  ``tests/test_profile.py::test_hetero_grid_compile_groups``).
+
+The per-class ADC energy rows use ``core.energy`` on each site's own
+spec and array shape — fewer MLP ADC bits cut the dominant per-column
+conversion energy on the widest matrices of the network.
+"""
+
+from __future__ import annotations
+
+from repro.core import energy as en
+from repro.core.analog import design_a
+from repro.core.errors import state_proportional
+from repro.hw import DIGITAL, Profile
+from repro.sweep import Axis, SweepSpec
+from repro.train.step import loss_fn
+
+from benchmarks.common import Timer, emit, run_bench_sweep, trials_for
+from benchmarks.lm_accuracy import EVAL_STEP, lm_evaluator, trained_lm
+
+#: the paper's recommended Design A (differential, analog accumulation,
+#: calibrated 8-bit ADC) under a realistic proportional cell error
+BASE_SPEC = design_a(error=state_proportional(0.05))
+
+ATTN_BITS = (6, 8)
+MLP_BITS = (4, 6, 8)
+
+#: the test_system tolerance formula, applied against the uniform
+#: baseline instead of the digital model (matched-loss criterion)
+MATCH = "loss < uniform * 1.35 + 0.2"
+
+
+def matched(loss: float, uniform: float) -> bool:
+    return loss < uniform * 1.35 + 0.2
+
+
+def base_profile() -> Profile:
+    """attn + mlp on BASE_SPEC arrays, lm_head kept digital."""
+    return Profile.by_class(attn=BASE_SPEC, mlp=BASE_SPEC, head=DIGITAL)
+
+
+def hetero_sweep(*, smoke: bool = False) -> SweepSpec:
+    """The attention-ADC-bits × MLP-ADC-bits serving grid.
+
+    ``smoke`` thins to attention fixed at 8 bits × mlp ∈ {6, 8} — still
+    two distinct profile signatures (two compile groups) and a real
+    mixed-vs-uniform comparison for the CI gate.
+    """
+    attn_bits = (8,) if smoke else ATTN_BITS
+    mlp_bits = (6, 8) if smoke else MLP_BITS
+    return SweepSpec(
+        name="hetero_precision_smoke" if smoke else "hetero_precision",
+        base=base_profile(),
+        axes=(
+            Axis("attn:adc.bits", attn_bits,
+                 labels=tuple(f"attn{b}b" for b in attn_bits)),
+            Axis("mlp:adc.bits", mlp_bits,
+                 labels=tuple(f"mlp{b}b" for b in mlp_bits)),
+        ),
+        trials=trials_for(3),
+        seed=1234,
+    )
+
+
+def _site_dims(cfg):
+    """(k, n) per site class: the largest projection of each class."""
+    d, h, hd = cfg.d_model, cfg.n_heads, cfg.hd
+    return {
+        "attn": (d, max(h * hd, d)),        # wq / wo
+        "mlp": (d, cfg.d_ff),               # w_gate / w_up
+    }
+
+
+def class_adc_energy(cfg, attn_bits: int, mlp_bits: int) -> dict:
+    """Per-class ADC-conversion count and ADC energy for one MVM."""
+    import dataclasses
+
+    out = {}
+    for cls, bits in (("attn", attn_bits), ("mlp", mlp_bits)):
+        spec = dataclasses.replace(
+            BASE_SPEC, adc=dataclasses.replace(BASE_SPEC.adc, bits=bits))
+        k, n = _site_dims(cfg)[cls]
+        out[cls] = {
+            "conversions": spec.adc_conversions_per_mvm(k, n),
+            "energy_pj": en.adc_energy(spec, k, n),
+        }
+    return out
+
+
+def main(timer: Timer):
+    from benchmarks import common
+
+    cfg, ds, params = trained_lm()
+    eval_batch = ds.batch(EVAL_STEP)
+    dig = float(loss_fn(cfg, params, eval_batch)[0])
+    emit("hetero_digital_baseline", 0.0, f"loss={dig:.4f}")
+
+    sweep = hetero_sweep(smoke=common.SMOKE)
+    res = run_bench_sweep(sweep, lm_evaluator())
+    trials = max(sweep.trials, 1)
+    for r in res:
+        emit(f"hetero_{r.tag}", r.wall_s * 1e6 / trials,
+             f"loss={r.metric_mean('loss'):.4f} "
+             f"top1={r.metric_mean('top1'):.4f} "
+             f"decode_match={r.metric_mean('decode_match'):.2f}")
+
+    uniform_tag = "attn8b_mlp8b"
+    uniform = res.metric(uniform_tag, "loss")
+
+    # the cheapest matched mixed design: fewest total ADC bits, then loss
+    best = None
+    for p in sweep.expand():
+        ab = int(p.coord("attn:adc.bits"))
+        mb = int(p.coord("mlp:adc.bits"))
+        if ab == 8 and mb == 8:
+            continue
+        loss = res.metric(p.tag, "loss")
+        if matched(loss, uniform):
+            cand = (ab + mb, loss, p.tag, ab, mb)
+            if best is None or cand < best:
+                best = cand
+    if best is None:
+        raise RuntimeError(
+            f"no mixed-precision design matched the uniform 8-bit baseline "
+            f"(uniform loss {uniform:.4f}, criterion {MATCH}); the "
+            f"heterogeneous-profile claim failed")
+    _, loss, tag, ab, mb = best
+    emit("hetero_claim_mixed_matches_uniform", 0.0,
+         f"{tag}: loss={loss:.4f} vs uniform={uniform:.4f} "
+         f"({MATCH}) with {8 - ab} fewer attn / {8 - mb} fewer mlp ADC bits")
+
+    e_mix = class_adc_energy(cfg, ab, mb)
+    e_uni = class_adc_energy(cfg, 8, 8)
+    for cls in ("attn", "mlp"):
+        emit(f"hetero_adc_energy_{cls}", 0.0,
+             f"mixed={e_mix[cls]['energy_pj']:.0f}pJ "
+             f"uniform={e_uni[cls]['energy_pj']:.0f}pJ "
+             f"conversions={e_mix[cls]['conversions']}")

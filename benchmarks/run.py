@@ -11,10 +11,12 @@ the run, e.g. ``python -m benchmarks.run lm_accuracy --smoke``.
 compile group exercising the whole vectorized engine), the Fig. 19
 parasitic grid (the traced-``r_hat`` bit-line solve path), the LM
 serving sweeps (``lm_accuracy`` — program → calibrate → serve end to
-end, including the serving-scale parasitic axis), and the serving
-runtime (``servebench`` — continuous vs static batching, with the
-runtime-vs-``decode_lm`` agreement gate); one programming trial per
-point, fresh (uncached) evaluation.
+end, including the serving-scale parasitic axis), the heterogeneous
+per-site precision grid (``hetero_precision`` — mixed attn/MLP ADC
+bits through ``repro.hw.Profile``, with the matched-loss claim gate),
+and the serving runtime (``servebench`` — continuous vs static
+batching, with the runtime-vs-``decode_lm`` agreement gate); one
+programming trial per point, fresh (uncached) evaluation.
 """
 
 import argparse
@@ -33,13 +35,14 @@ MODULES = [
     "table3_energy",
     "table4_sonos",
     "lm_accuracy",
+    "hetero_precision",
     "servebench",
     "kernelbench",
     "roofline",
 ]
 
 SMOKE_MODULES = ["fig10_onoff", "fig19_parasitics", "lm_accuracy",
-                 "servebench"]
+                 "hetero_precision", "servebench"]
 
 
 def main() -> None:

@@ -58,7 +58,12 @@ class ADCConfig:
     bits: int = 8
 
     def __post_init__(self):
-        assert self.style in ("none", "fpg", "calibrated"), self.style
+        if self.style not in ("none", "fpg", "calibrated"):
+            raise ValueError(
+                f"ADCConfig.style must be one of ('none', 'fpg', "
+                f"'calibrated'), got {self.style!r}")
+        if self.bits < 1:
+            raise ValueError(f"ADCConfig.bits must be >= 1, got {self.bits}")
 
 
 def adc_quantize(

@@ -69,7 +69,16 @@ class AnalogSpec:
     compute_dtype: jnp.dtype = jnp.float32
 
     def __post_init__(self):
-        assert self.input_accum in ("analog", "digital")
+        if self.input_accum not in ("analog", "digital"):
+            raise ValueError(
+                f"AnalogSpec.input_accum must be 'analog' or 'digital', "
+                f"got {self.input_accum!r}")
+        if self.input_bits < 1:
+            raise ValueError(
+                f"AnalogSpec.input_bits must be >= 1, got {self.input_bits}")
+        if self.max_rows < 1:
+            raise ValueError(
+                f"AnalogSpec.max_rows must be >= 1, got {self.max_rows}")
 
     @property
     def parasitics_on(self) -> bool:
@@ -183,7 +192,10 @@ class ProgrammedMatrix:
 
 def program_codes(w: jax.Array, spec: AnalogSpec) -> ProgrammedMatrix:
     """Quantize + map a float weight matrix ``(K, N)`` to integer codes."""
-    assert w.ndim == 2, f"program expects (K, N), got {w.shape}"
+    if w.ndim != 2:
+        raise ValueError(
+            f"program_codes expects a 2-D (K, N) weight matrix, got shape "
+            f"{w.shape}")
     k, n = w.shape
     m = spec.mapping
     mag_bits = None if m.scheme == "offset" else m.magnitude_bits
@@ -318,7 +330,10 @@ def analog_matmul(
     m = spec.mapping
     lead = x.shape[:-1]
     k = x.shape[-1]
-    assert k == aw.k, (k, aw.k)
+    if k != aw.k:
+        raise ValueError(
+            f"analog_matmul input depth {k} does not match the programmed "
+            f"matrix depth {aw.k} (weights are ({aw.k}, {aw.n}))")
     xf = x.reshape(-1, k).astype(spec.compute_dtype)
 
     xq = quantize_acts(
@@ -412,9 +427,11 @@ def analog_matmul(
         hi = lo + (2 ** bits - 1) * grid
         v_hat = adc_lib.adc_quantize(v, lo, hi, bits)
     else:
-        assert adc_lo is not None and adc_hi is not None, (
-            "calibrated ADC requires ranges from the calibration pass"
-        )
+        if adc_lo is None or adc_hi is None:
+            raise ValueError(
+                "adc.style='calibrated' requires adc_lo/adc_hi ranges from "
+                "the calibration pass (analog_matmul(..., collect=True) or "
+                "core.calibrate.calibrate_adc_for_matmul)")
         lo = jnp.reshape(adc_lo, (1, m.n_slices, 1, 1, 1)).astype(v.dtype)
         hi = jnp.reshape(adc_hi, (1, m.n_slices, 1, 1, 1)).astype(v.dtype)
         v_hat = adc_lib.adc_quantize(v, lo, hi, spec.adc.bits)

@@ -154,6 +154,27 @@ def core_costs(
     )
 
 
+def adc_energy(spec: AnalogSpec, k: int = 1152, n: int = 256, *,
+               ramp_scaled: bool = True) -> float:
+    """ADC share of one full MVM's energy in pJ, resolution-sensitive.
+
+    The Table-3 component fit prices a conversion at ``E_CMP_PJ``
+    regardless of resolution because every fitted design converts at
+    8 bits.  A ramp converter counts ``2**bits`` comparator cycles per
+    conversion, so ``ramp_scaled=True`` scales the per-conversion energy
+    by ``2**(bits - 8)`` — the per-*site* lever heterogeneous profiles
+    pull (``benchmarks/hetero_precision.py``): dropping an MLP class
+    from 8 to 6 bits cuts its conversion energy 4× on the widest
+    matrices of the network.  At 8 bits this reproduces the fitted
+    model's ADC term exactly.
+    """
+    s, d, p, bits, digital, ramp, conv, integ, sc, row, sa = _static_counts(
+        spec, k, n
+    )
+    scale = 2.0 ** (spec.adc.bits - 8) if ramp_scaled else 1.0
+    return conv * E_CMP_PJ * scale + ramp * E_RAMP_PJ + sa * E_SA_PJ
+
+
 def energy_breakdown(
     spec: AnalogSpec, k: int = 1152, n: int = 256, *,
     g_avg: float, activity: float = DEFAULT_ACTIVITY,

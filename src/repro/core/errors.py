@@ -50,12 +50,10 @@ class ErrorModel:
     clip_at_zero: bool = False
 
     def __post_init__(self):
-        assert self.kind in (
-            "none",
-            "state_independent",
-            "state_proportional",
-            "sonos",
-        ), self.kind
+        kinds = ("none", "state_independent", "state_proportional", "sonos")
+        if self.kind not in kinds:
+            raise ValueError(
+                f"ErrorModel.kind must be one of {kinds}, got {self.kind!r}")
 
     def sigma(self, g: jax.Array) -> jax.Array:
         """Std-dev of the programming error at conductance ``g``."""

@@ -44,11 +44,18 @@ class MappingConfig:
     unit_column: bool = False             # analog offset column (offset only)
 
     def __post_init__(self):
-        assert self.scheme in ("differential", "offset"), self.scheme
-        if self.bits_per_cell is not None:
-            assert self.bits_per_cell in (1, 2, 4, 8), self.bits_per_cell
-        if self.unit_column:
-            assert self.scheme == "offset", "unit column only applies to offset"
+        if self.scheme not in ("differential", "offset"):
+            raise ValueError(
+                f"MappingConfig.scheme must be 'differential' or 'offset', "
+                f"got {self.scheme!r}")
+        if self.bits_per_cell is not None and self.bits_per_cell not in (1, 2, 4, 8):
+            raise ValueError(
+                f"MappingConfig.bits_per_cell must be None (unsliced) or "
+                f"one of (1, 2, 4, 8), got {self.bits_per_cell!r}")
+        if self.unit_column and self.scheme != "offset":
+            raise ValueError(
+                "MappingConfig.unit_column=True only applies to the "
+                f"'offset' scheme, got scheme={self.scheme!r}")
 
     # ---- derived static properties -------------------------------------
     @property

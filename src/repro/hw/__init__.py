@@ -1,0 +1,45 @@
+"""``repro.hw`` — heterogeneous per-site hardware profiles.
+
+A :class:`Profile` maps each analog matmul site of a network (the stable
+hook names — ``wq``/``wk``/``wv``/``wo``, ``w_gate``/``w_up``/``w_down``,
+``rwkv_*``, ``head``) to its own :class:`~repro.core.analog.AnalogSpec`,
+via ordered pattern rules with optional layer bands and a ``digital``
+fallback for sites kept off-array.  See DESIGN.md §Heterogeneous
+profiles.
+
+>>> from repro import hw
+>>> profile = hw.Profile.by_class(
+...     attn=design_a(),                        # 8-bit calibrated ADC
+...     mlp=set_field(design_a(), "adc.bits", 6),
+...     head=hw.DIGITAL,                        # lm_head stays digital
+... )
+>>> pack = program_lm(cfg, params, profile, key)
+"""
+
+from repro.hw.profile import (
+    DIGITAL,
+    GEOMETRY_FIELDS,
+    HEAD,
+    Profile,
+    Rule,
+    SITE_CLASS,
+    SiteSpecs,
+    as_profile,
+    check_band_geometry,
+    geometry_key,
+    site_class,
+)
+
+__all__ = [
+    "DIGITAL",
+    "GEOMETRY_FIELDS",
+    "HEAD",
+    "Profile",
+    "Rule",
+    "SITE_CLASS",
+    "SiteSpecs",
+    "as_profile",
+    "check_band_geometry",
+    "geometry_key",
+    "site_class",
+]

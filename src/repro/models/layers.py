@@ -20,6 +20,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core.analog import AnalogSpec, AnalogWeights, analog_matmul
+from repro.hw.profile import SiteSpecs
 
 # ---------------------------------------------------------------------------
 # analog execution hook
@@ -34,11 +35,14 @@ class AnalogCtx:
     ``weights[name]`` is the :class:`AnalogWeights` for this layer (already
     sliced out of the layer-stacked pack by the scan), ``lo/hi[name]`` the
     calibrated per-slice ADC limits, ``act[name]`` the activation clip.
-    ``collect=True`` bypasses the ADC and emits calibration stats into the
-    block's aux dict instead.
+    ``specs`` carries the *site-resolved* spec per hook name (heterogeneous
+    profiles: attention and MLP projections may sit on different hardware;
+    sites absent from ``weights`` run digitally).  ``collect=True``
+    bypasses the ADC and emits calibration stats into the block's aux
+    dict instead.
     """
 
-    spec: AnalogSpec = dataclasses.field(metadata=dict(static=True))
+    specs: SiteSpecs = dataclasses.field(metadata=dict(static=True))
     weights: Dict[str, AnalogWeights]
     lo: Dict[str, jax.Array]
     hi: Dict[str, jax.Array]
@@ -56,26 +60,28 @@ def dense(
     bias: Optional[jax.Array] = None,
 ) -> jax.Array:
     """``x @ w`` — digitally, or through the analog pipeline when ``ctx``
-    carries programmed conductances for ``name``."""
+    carries programmed conductances for ``name`` (executed under the
+    site's own resolved :class:`AnalogSpec`)."""
     if ctx is None or name not in ctx.weights:
         y = x @ w
     else:
         aw = ctx.weights[name]
+        spec = ctx.specs.spec_for(name)
         if ctx.collect:
             y, stats = analog_matmul(
-                x, aw, ctx.spec, act_hi=ctx.act.get(name), collect=True
+                x, aw, spec, act_hi=ctx.act.get(name), collect=True
             )
             if aux is not None:
                 aux[f"adc/{name}"] = stats
                 from repro.core.quant import calibrate_act_range
 
-                _, a_hi = calibrate_act_range(x, ctx.spec.input_bits)
+                _, a_hi = calibrate_act_range(x, spec.input_bits)
                 aux[f"act/{name}"] = a_hi
         else:
             y = analog_matmul(
                 x,
                 aw,
-                ctx.spec,
+                spec,
                 adc_lo=ctx.lo[name],
                 adc_hi=ctx.hi[name],
                 act_hi=ctx.act.get(name),

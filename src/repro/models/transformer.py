@@ -21,7 +21,8 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.config import ModelConfig
-from repro.core.analog import AnalogSpec, AnalogWeights
+from repro.core.analog import AnalogSpec, AnalogWeights, analog_matmul
+from repro.hw.profile import Profile, SiteSpecs
 from repro.models import ssm as ssm_mod
 from repro.models.attention import attention_block, init_attention
 from repro.models.layers import AnalogCtx, dense, norm, rms_norm
@@ -48,9 +49,24 @@ def cast_params(params, dtype):
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class AnalogPack:
-    """Layer-stacked analog weights + calibrated ranges for the LM."""
+    """Layer-stacked analog weights + calibrated ranges for the LM.
 
-    spec: AnalogSpec = dataclasses.field(metadata=dict(static=True))
+    Heterogeneous profiles: ``profile`` is the site resolver the pack was
+    programmed from; ``bands`` are its maximal contiguous layer bands
+    (``((0, L),)`` for any profile without layer-band rules — the uniform
+    fast path, one scan, bit-identical to the pre-profile program) and
+    ``band_specs[i]`` the resolved (site, spec) map serving band ``i``.
+    Each site keeps ONE layer-stacked conductance array regardless of
+    banding (per-band specs must agree on array geometry —
+    ``repro.hw.check_band_geometry``); the scan is split at band
+    boundaries so each band runs under its own static specs.
+    """
+
+    profile: Profile = dataclasses.field(metadata=dict(static=True))
+    bands: Tuple[Tuple[int, int], ...] = dataclasses.field(
+        metadata=dict(static=True))
+    band_specs: Tuple[SiteSpecs, ...] = dataclasses.field(
+        metadata=dict(static=True))
     layer_weights: Dict[str, AnalogWeights]     # arrays stacked over L
     layer_lo: Dict[str, jax.Array]              # (L, S)
     layer_hi: Dict[str, jax.Array]
@@ -59,7 +75,23 @@ class AnalogPack:
     head_lo: Optional[jax.Array] = None
     head_hi: Optional[jax.Array] = None
     head_act: Optional[jax.Array] = None
+    head_spec: Optional[AnalogSpec] = dataclasses.field(
+        default=None, metadata=dict(static=True))
     collect: bool = dataclasses.field(default=False, metadata=dict(static=True))
+
+    def site_spec(self, name: str) -> AnalogSpec:
+        """The spec serving ``name`` (first band where it is analog).
+
+        Array geometry (mapping, max_rows) is band-uniform per site, so
+        any analog band answers geometry questions like ``mapping.sliced``.
+        """
+        if name == "head" and self.head_spec is not None:
+            return self.head_spec
+        for ss in self.band_specs:
+            s = ss.get(name)
+            if s is not None:
+                return s
+        raise KeyError(f"site {name!r} is not analog in any band of this pack")
 
 
 # ---------------------------------------------------------------------------
@@ -172,12 +204,46 @@ def _block(
     return x, {"attn": new_kv}, aux
 
 
-def _make_actx(pack: Optional[AnalogPack], sliced) -> Optional[AnalogCtx]:
+def _make_actx(pack: Optional[AnalogPack], sliced,
+               band: int) -> Optional[AnalogCtx]:
+    """Band-resolved per-layer context: only sites analog in this band
+    are routed through the analog pipeline (the rest run digitally)."""
     if pack is None:
         return None
     w, lo, hi, act = sliced
-    return AnalogCtx(spec=pack.spec, weights=w, lo=lo, hi=hi, act=act,
-                     collect=pack.collect)
+    ss = pack.band_specs[band]
+    names = ss.names
+    return AnalogCtx(
+        specs=ss,
+        weights={n: w[n] for n in names if n in w},
+        lo={n: lo[n] for n in names if n in lo},
+        hi={n: hi[n] for n in names if n in hi},
+        act={n: act[n] for n in names if n in act},
+        collect=pack.collect,
+    )
+
+
+def _stitch_aux(auxes, bands):
+    """Concatenate per-band aux stacks back to full (L, ...) stacks.
+
+    Bands may differ in which sites are analog (digital bands emit no
+    ``adc/``/``act/`` entries); absent entries are zero-filled so every
+    key yields one full-length stack (the filler rows belong to layers
+    that never consult them)."""
+    keys: list = []
+    for a in auxes:
+        for k in a:
+            if k not in keys:
+                keys.append(k)
+    out = {}
+    for k in keys:
+        proto = next(a[k] for a in auxes if k in a)
+        parts = []
+        for (lo_b, hi_b), a in zip(bands, auxes):
+            parts.append(a[k] if k in a else jnp.zeros(
+                (hi_b - lo_b,) + proto.shape[1:], proto.dtype))
+        out[k] = jnp.concatenate(parts, axis=0)
+    return out
 
 
 def _scan_layers(
@@ -201,20 +267,37 @@ def _scan_layers(
         xs["a"] = (pack.layer_weights, pack.layer_lo, pack.layer_hi,
                    pack.layer_act)
 
-    def body(x, xs_l):
-        actx = _make_actx(pack, xs_l.get("a")) if pack is not None else None
-        window = xs_l.get("w")
-        x, new_cache, aux = _block(
-            cfg, xs_l["p"], x,
-            positions=positions, window=window,
-            cache_l=xs_l.get("c"), cache_len=cache_len, actx=actx,
-        )
-        return x, {"cache": new_cache, "aux": aux}
+    def band_scan(x, xs_band, band: int):
+        def body(x, xs_l):
+            actx = _make_actx(pack, xs_l.get("a"), band) \
+                if pack is not None else None
+            window = xs_l.get("w")
+            x, new_cache, aux = _block(
+                cfg, xs_l["p"], x,
+                positions=positions, window=window,
+                cache_l=xs_l.get("c"), cache_len=cache_len, actx=actx,
+            )
+            return x, {"cache": new_cache, "aux": aux}
 
-    if remat:
-        body = jax.checkpoint(body)
-    x, ys = lax.scan(body, x, xs)
-    return x, ys["cache"], ys["aux"]
+        if remat:
+            body = jax.checkpoint(body)
+        return lax.scan(body, x, xs_band)
+
+    bands = pack.bands if pack is not None else ((0, cfg.n_layers),)
+    if len(bands) == 1:
+        # uniform profile (or digital run): one scan, exactly the
+        # pre-profile lowering — the bit-identity fast path.
+        x, ys = band_scan(x, xs, 0)
+        return x, ys["cache"], ys["aux"]
+
+    caches, auxes = [], []
+    for b, (lo_b, hi_b) in enumerate(bands):
+        xs_band = jax.tree.map(lambda a: a[lo_b:hi_b], xs)
+        x, ys = band_scan(x, xs_band, b)
+        caches.append(ys["cache"])
+        auxes.append(ys["aux"])
+    cache_out = jax.tree.map(lambda *p: jnp.concatenate(p, axis=0), *caches)
+    return x, cache_out, _stitch_aux(auxes, bands)
 
 
 # ---------------------------------------------------------------------------
@@ -467,9 +550,7 @@ def _head(cfg, cp, x, pack: Optional[AnalogPack]):
     x = norm(x, cp["final_norm"], cfg.norm)
     w = cp["embed"].T if cfg.tie_embeddings else cp["lm_head"]
     if pack is not None and pack.head is not None and not pack.collect:
-        from repro.core.analog import analog_matmul
-
-        y = analog_matmul(x, pack.head, pack.spec, adc_lo=pack.head_lo,
+        y = analog_matmul(x, pack.head, pack.head_spec, adc_lo=pack.head_lo,
                           adc_hi=pack.head_hi, act_hi=pack.head_act)
         return y.astype(jnp.float32)
     return (x @ w).astype(jnp.float32)

@@ -35,6 +35,15 @@ decode alike) through the bit-line tridiagonal solve, and ``r_hat`` stays
 tracer-safe so ``ServeEvaluator`` batches a whole parasitic axis through
 one compilation (DESIGN.md §Parasitics).
 
+Every programming/calibration entry point takes either one global
+:class:`AnalogSpec` (applied uniformly, the legacy API — bit-identical to
+the pre-profile path) or a :class:`repro.hw.Profile` that resolves each
+*site* (hook name) to its own spec: heterogeneous per-site hardware,
+with ``digital`` sites kept off-array and per-layer-band rules splitting
+the scanned model body at band boundaries (DESIGN.md §Heterogeneous
+profiles).  Programming keys stay site-keyed (``hook_key``) either way,
+so a site's noise never depends on what the rest of the network runs on.
+
 Scope: the dense/vlm/ssm(rwkv) transformer family (the paper's technique
 targets weight-stationary MVMs; see DESIGN.md §Arch-applicability for the
 MoE-expert / recurrence caveats).
@@ -44,7 +53,7 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
-from typing import Dict, Optional, Tuple
+from typing import Dict, List, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -60,8 +69,16 @@ from repro.core.analog import (
     program_from_codes,
 )
 from repro.core.quant import calibrate_act_range
+from repro.hw.profile import (
+    Profile,
+    SiteSpecs,
+    as_profile,
+    check_band_geometry,
+)
 from repro.models.registry import get_model
 from repro.models.transformer import AnalogPack, cast_params, forward
+
+SpecLike = Union[AnalogSpec, Profile]
 
 #: weight leaves programmed to analog arrays, per family
 DENSE_NAMES = {
@@ -106,17 +123,56 @@ def _program_stack_from_codes(pm: ProgrammedMatrix, spec: AnalogSpec,
     return jax.vmap(lambda c, k: program_from_codes(c, spec, k))(pm, keys)
 
 
-def lm_program_codes(cfg: ModelConfig, params: dict, spec: AnalogSpec,
+def _site_resolution(profile: Profile, sites: List[str], n_layers: int):
+    """``(bands, {site: [spec-or-None per band]})`` with geometry checks.
+
+    Per-band specs of one site must agree on array geometry (its
+    conductance stack is ONE layer-stacked array) —
+    :func:`repro.hw.check_band_geometry` raises otherwise.  Bands come
+    from rule *identity*, never spec equality, so traced spec fields
+    (sweep batching) are safe.
+    """
+    bands = profile.layer_bands(sites, n_layers) if sites \
+        else ((0, n_layers),)
+    per_site: Dict[str, List[Optional[AnalogSpec]]] = {}
+    for name in sites:
+        specs = []
+        for lo, _hi in bands:
+            sp = profile.resolve(name, lo)
+            specs.append(sp if isinstance(sp, AnalogSpec) else None)
+        analog = [s for s in specs if s is not None]
+        if analog:
+            check_band_geometry(name, analog)
+        per_site[name] = specs
+    return bands, per_site
+
+
+def lm_hook_names(cfg: ModelConfig) -> List[str]:
+    """Every potential analog layer-hook name for this family, in the
+    stable programming order (head excluded)."""
+    groups = RWKV_NAMES if cfg.rwkv else DENSE_NAMES
+    return [HOOK_NAME[(parent, leaf)]
+            for parent, leaves in groups.items() for leaf in leaves]
+
+
+def lm_program_codes(cfg: ModelConfig, params: dict, spec: SpecLike,
                      *, include_head: bool = True,
                      ) -> Dict[str, ProgrammedMatrix]:
     """Quantize + map every analog hook of the LM to integer code stacks.
 
     The deterministic half of :func:`program_lm`: independent of the
     programming key, ``error.alpha``, and ``on_off_ratio``, hence cacheable
-    per ``(mapping signature, params hash)`` across trials and design
-    points (see ``repro.sweep.serve_eval``).  Layer hooks carry codes
-    stacked over layers; the head (``HEAD``) is a plain 2-D matrix.
+    per ``(per-site mapping signature, params hash)`` across trials and
+    design points (see ``repro.sweep.serve_eval``).  Layer hooks carry
+    codes stacked over layers; the head (``HEAD``) is a plain 2-D matrix.
+
+    ``spec`` may be one global :class:`AnalogSpec` or a
+    :class:`repro.hw.Profile`; sites the profile resolves to ``digital``
+    at every layer are omitted (they serve through the exact digital
+    matmul).  Codes use the site's own mapping, which is band-uniform per
+    site (geometry check in :func:`program_lm_from_codes`).
     """
+    profile = as_profile(spec)
     groups = RWKV_NAMES if cfg.rwkv else DENSE_NAMES
     codes: Dict[str, ProgrammedMatrix] = {}
     if "layers" not in params:
@@ -126,59 +182,129 @@ def lm_program_codes(cfg: ModelConfig, params: dict, spec: AnalogSpec,
             f"families (dense / moe / vlm / ssm-rwkv) — see DESIGN.md "
             f"§Arch-applicability")
     cp = params["layers"]
+    n_digital = 0
     for parent, leaves in groups.items():
         for leaf in leaves:
             if parent not in cp or leaf not in cp[parent]:
                 continue
             name = HOOK_NAME[(parent, leaf)]
+            site_spec = profile.first_analog(name, cfg.n_layers)
+            if site_spec is None:
+                n_digital += 1
+                continue
             w_stack = cp[parent][leaf].astype(jnp.float32)
-            codes[name] = jax.vmap(lambda w: program_codes(w, spec))(w_stack)
+            codes[name] = jax.vmap(
+                lambda w, sp=site_spec: program_codes(w, sp))(w_stack)
     if not codes:
+        if n_digital:
+            raise ValueError(
+                f"the profile resolves every projection hook of family "
+                f"{cfg.family!r} ({cfg.name}) to 'digital'; at least one "
+                f"site must be analog to program a pack (rules: "
+                f"{[r.pattern for r in profile.rules]}, default "
+                f"{'analog' if isinstance(profile.default, AnalogSpec) else 'digital'})")
         raise ValueError(
             f"no analog hooks found for family {cfg.family!r} ({cfg.name}): "
             f"expected {'rwkv' if cfg.rwkv else 'attn/mlp'} projection "
             f"leaves {sorted(n for g in groups.values() for n in g)} under "
             f"params['layers']")
-    if include_head:
+    head_spec = profile.resolve(HEAD)
+    if include_head and isinstance(head_spec, AnalogSpec):
         w = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
-        codes[HEAD] = program_codes(w.astype(jnp.float32), spec)
+        codes[HEAD] = program_codes(w.astype(jnp.float32), head_spec)
     return codes
 
 
 def program_lm_from_codes(cfg: ModelConfig,
                           codes: Dict[str, ProgrammedMatrix],
-                          spec: AnalogSpec, key: jax.Array) -> AnalogPack:
+                          spec: SpecLike, key: jax.Array) -> AnalogPack:
     """Conductance-convert + perturb cached code stacks into a pack.
 
-    The per-trial half of :func:`program_lm`: tracer-safe in
-    ``spec.error.alpha`` / ``spec.mapping.on_off_ratio``, so the sweep
-    engine vmaps it over trial keys and batches design points through one
-    compilation.  Key schedule: ``fold_in(hook_key(key, name), layer)``.
+    The per-trial half of :func:`program_lm`: tracer-safe in every site's
+    ``error.alpha`` / ``mapping.on_off_ratio``, so the sweep engine vmaps
+    it over trial keys and batches design points through one compilation.
+    Key schedule: ``fold_in(hook_key(key, name), layer)`` with *absolute*
+    layer indices — a site's programming noise is invariant to band
+    structure and to what the rest of the network runs on.
     """
-    layer_weights: Dict[str, AnalogWeights] = {}
-    for name, pm in codes.items():
-        if name == HEAD:
-            continue
-        layer_weights[name] = _program_stack_from_codes(
-            pm, spec, hook_key(key, name))
-    head = None
-    if HEAD in codes:
-        head = program_from_codes(codes[HEAD], spec, hook_key(key, HEAD))
-    s = spec.mapping.n_slices
+    profile = as_profile(spec)
+    sites = [n for n in codes if n != HEAD]
     l = cfg.n_layers
-    zeros = {n: jnp.zeros((l, s)) for n in layer_weights}
+    bands, per_site = _site_resolution(profile, sites, l)
+
+    layer_weights: Dict[str, AnalogWeights] = {}
+    for name in sites:
+        layer_weights[name] = _program_site_stack(
+            codes[name], per_site[name], bands, hook_key(key, name))
+
+    head, head_spec = None, None
+    if HEAD in codes:
+        hs = profile.resolve(HEAD)
+        if not isinstance(hs, AnalogSpec):
+            raise ValueError(
+                "codes include the 'head' site but the profile resolves "
+                "it to 'digital'; rebuild codes with this profile "
+                "(lm_program_codes omits digital sites)")
+        head_spec = hs
+        head = program_from_codes(codes[HEAD], hs, hook_key(key, HEAD))
+
+    def _geom(name: str) -> AnalogSpec:
+        return next(s for s in per_site[name] if s is not None)
+
+    band_specs = tuple(
+        SiteSpecs(tuple(
+            (n, per_site[n][b]) for n in sites if per_site[n][b] is not None))
+        for b in range(len(bands)))
+    zeros = {n: jnp.zeros((l, _geom(n).mapping.n_slices))
+             for n in layer_weights}
+    ones = {n: jnp.ones((l, _geom(n).mapping.n_slices))
+            for n in layer_weights}
+    s_head = head_spec.mapping.n_slices if head_spec is not None else 1
     return AnalogPack(
-        spec=spec, layer_weights=layer_weights,
-        layer_lo=zeros, layer_hi={n: jnp.ones((l, s)) for n in layer_weights},
+        profile=profile, bands=bands, band_specs=band_specs,
+        layer_weights=layer_weights,
+        layer_lo=zeros, layer_hi=ones,
         layer_act={}, head=head,
-        head_lo=jnp.zeros((s,)), head_hi=jnp.ones((s,)),
-        head_act=None, collect=False,
+        head_lo=jnp.zeros((s_head,)), head_hi=jnp.ones((s_head,)),
+        head_act=None, head_spec=head_spec, collect=False,
     )
 
 
-def program_lm(cfg: ModelConfig, params: dict, spec: AnalogSpec,
+def _program_site_stack(pm: ProgrammedMatrix,
+                        specs_per_band: List[Optional[AnalogSpec]],
+                        bands: Tuple[Tuple[int, int], ...],
+                        key: jax.Array) -> AnalogWeights:
+    """Program one site's layer stack, per band, into one stacked array.
+
+    The single-band case is exactly the legacy path (one vmap over all
+    layers).  Banded sites program each band with its own spec and
+    concatenate — shapes agree because per-site array geometry is
+    band-uniform; layers falling in a ``digital`` band are programmed
+    with the site's geometry spec purely as stack filler (the scan never
+    routes them analog).
+    """
+    if len(bands) == 1:
+        return _program_stack_from_codes(pm, specs_per_band[0], key)
+    geom = next(s for s in specs_per_band if s is not None)
+    parts = []
+    for (lo, hi), sp in zip(bands, specs_per_band):
+        sub = jax.tree.map(lambda a: a[lo:hi], pm)
+        keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(
+            jnp.arange(lo, hi))
+        spec_b = sp if sp is not None else geom
+        parts.append(jax.vmap(
+            lambda c, k: program_from_codes(c, spec_b, k))(sub, keys))
+    return jax.tree.map(lambda *p: jnp.concatenate(p, axis=0), *parts)
+
+
+def program_lm(cfg: ModelConfig, params: dict, spec: SpecLike,
                key: jax.Array, *, include_head: bool = True) -> AnalogPack:
-    """Program the LM's weight-stationary projections onto analog arrays."""
+    """Program the LM's weight-stationary projections onto analog arrays.
+
+    ``spec``: one global :class:`AnalogSpec` (uniform hardware — the
+    legacy API, bit-identical) or a :class:`repro.hw.Profile` resolving
+    each site to its own spec.
+    """
     codes = lm_program_codes(cfg, params, spec, include_head=include_head)
     return program_lm_from_codes(cfg, codes, spec, key)
 
@@ -210,20 +336,20 @@ def calibrate_lm(cfg: ModelConfig, params: dict, pack: AnalogPack,
             continue
         name = k[len("adc/"):]
         lo_s, hi_s = v[..., 0], v[..., 1]       # (L, S)
-        if pack.spec.mapping.sliced:
+        if pack.site_spec(name).mapping.sliced:
             lo_s, hi_s = jax.vmap(cal.constrain_power_of_two)(lo_s, hi_s)
         lo[name], hi[name] = lo_s, hi_s
 
     # head calibration on the true final-norm hiddens (emitted by the
-    # collect forward)
+    # collect forward), under the head site's own resolved spec
     head_lo, head_hi, head_act = pack.head_lo, pack.head_hi, None
     if pack.head is not None:
         from repro.core.analog import analog_matmul
 
         x = aux2["final_hidden"].reshape(-1, cfg.d_model)
-        _, head_act = calibrate_act_range(x, pack.spec.input_bits)
+        _, head_act = calibrate_act_range(x, pack.head_spec.input_bits)
         _, stats = analog_matmul(
-            x, pack.head, pack.spec, act_hi=head_act, collect=True)
+            x, pack.head, pack.head_spec, act_hi=head_act, collect=True)
         head_lo, head_hi = stats[:, 0], stats[:, 1]
 
     return dataclasses.replace(

@@ -19,7 +19,11 @@ scheduling, minus paged KV — where
 * every matmul serves through the :class:`AnalogPack` when one is given
   — programming, calibration, decode and sampling all ride the same
   analog config, with ``r_hat`` / ``error.alpha`` carried in the pack's
-  spec, so a running server is a valid design point of the sweeps.
+  per-site specs, so a running server is a valid design point of the
+  sweeps.  Heterogeneous packs (``repro.hw.Profile``: mixed per-site
+  ADC precision, digital head, layer bands) serve unchanged — the pack
+  carries its own site resolution, and the agreement contract below
+  holds per site spec (pinned by ``tests/test_profile.py``).
 
 Sampling keys compose with programming keys the same way hook keys do
 (``serve.analog_engine.hook_key``): a request's stream key is folded

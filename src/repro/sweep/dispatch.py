@@ -63,4 +63,8 @@ def shard_point_trial_batch(dyn: jax.Array, keys: jax.Array,
         return shard_leading(dyn, mesh), keys
     if keys.shape[0] % n == 0:
         return dyn, shard_leading(keys, mesh)
-    return shard_leading(dyn, mesh), keys
+    # neither axis divides the mesh: replicate explicitly.  (The previous
+    # fallback called shard_leading on the points axis, which silently
+    # no-ops on the same divisibility check — stating the replication
+    # outcome here keeps the contract readable and testable.)
+    return dyn, keys

@@ -136,7 +136,7 @@ def serial_accuracy(
     return float(np.mean(accs)), float(np.std(accs)), accs
 
 
-def dynamic_fields_for(spec: AnalogSpec) -> Dict[str, float]:
+def dynamic_fields_for(spec) -> Dict[str, float]:
     """The spec fields batchable as traced scalars for ``spec``.
 
     Shared by every accuracy evaluator (``ClassifierEvaluator``,
@@ -149,7 +149,24 @@ def dynamic_fields_for(spec: AnalogSpec) -> Dict[str, float]:
     * ``r_hat`` — only while parasitics are *on*; the on/off bit is a
       static program property (``AnalogSpec.parasitics_on``), which is
       what collapses a Fig. 19 axis into one compile group.
+
+    ``spec`` may also be a :class:`repro.hw.Profile`: each analog rule's
+    dynamic fields are prefixed with its selector
+    (``"attn:error.alpha"``), matching the profile spelling of
+    ``set_field`` — so mixed-precision serving grids batch per profile
+    signature exactly like global-spec grids batch per shape.  A selector
+    shared by several rules (layer bands) stays dynamic only if the rules
+    agree on the value (``with_field`` sets all of them at once).
     """
+    from repro.hw.profile import Profile
+
+    if isinstance(spec, Profile):
+        seen: Dict[str, List[float]] = {}
+        for selector, sp in spec.selectors():
+            for path, v in dynamic_fields_for(sp).items():
+                seen.setdefault(f"{selector}:{path}", []).append(v)
+        return {name: vals[0] for name, vals in seen.items()
+                if len(set(vals)) == 1}
     dyn: Dict[str, float] = {}
     if spec.error.kind in ("state_independent", "state_proportional"):
         dyn["error.alpha"] = float(spec.error.alpha)

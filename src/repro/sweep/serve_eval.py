@@ -42,10 +42,12 @@ import numpy as np
 
 from repro.config import ModelConfig
 from repro.core.analog import AnalogSpec
+from repro.hw.profile import HEAD, as_profile
 from repro.serve.analog_engine import (
     analog_eval_metrics,
     calibrate_lm,
     decode_lm,
+    lm_hook_names,
     lm_program_codes,
     program_lm,
     program_lm_from_codes,
@@ -154,15 +156,41 @@ class ServeEvaluator:
         ]
 
     # -- caches ------------------------------------------------------------
-    def _codes(self, template: AnalogSpec) -> dict:
-        """Programmed-pack cache keyed by (mapping signature, params hash).
+    def _codes_key(self, template) -> str:
+        """Per-*site* mapping-signature key of the programmed-codes cache.
+
+        Codes depend only on each site's mapping (g_min-independent), so
+        design points agreeing on every site's mapping — including which
+        sites are digital — share one cached code pack.  A global
+        AnalogSpec template resolves uniformly and degenerates to the
+        legacy single-signature key.
+        """
+        profile = as_profile(template)
+        parts = []
+        for name in lm_hook_names(self.cfg):
+            sp = profile.first_analog(name, self.cfg.n_layers)
+            parts.append(
+                f"{name}={'digital' if sp is None else mapping_signature(sp)}")
+        if self.include_head:
+            # the head has no layer index: mirror lm_program_codes, which
+            # resolves it at layer=None (band rules never match it) — a
+            # first_analog key here would collide banded-digital-head
+            # profiles with analog-head ones and poison the cache
+            hs = profile.resolve(HEAD)
+            parts.append(
+                f"{HEAD}="
+                f"{mapping_signature(hs) if isinstance(hs, AnalogSpec) else 'digital'}")
+        return "|".join(parts)
+
+    def _codes(self, template) -> dict:
+        """Programmed-pack cache keyed by (site mappings, params hash).
 
         The params hash is carried by the evaluator signature (one
-        evaluator = one network), so the in-memory key is the mapping
-        signature alone — same structure as
+        evaluator = one network), so the in-memory key is the per-site
+        mapping signature alone — same structure as
         ``ClassifierEvaluator._programmed``.
         """
-        key = mapping_signature(template)
+        key = self._codes_key(template)
         if key not in self._codes_cache:
             self._codes_cache[key] = lm_program_codes(
                 self.cfg, self.params, template,

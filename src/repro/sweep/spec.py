@@ -35,7 +35,23 @@ from repro.core.analog import AnalogSpec
 
 
 def set_field(obj, path: str, value):
-    """Functionally set a dotted dataclass field path, e.g. ``mapping.scheme``."""
+    """Functionally set a dotted dataclass field path, e.g. ``mapping.scheme``.
+
+    On a :class:`repro.hw.Profile`, paths are spelled
+    ``"<selector>:<field.path>"`` (e.g. ``"attn:adc.bits"``): the selector
+    names the profile rule(s) whose spec the field is set on (``"default"``
+    for the fallback spec).  This is what makes per-site-class sweep axes
+    compose with the unchanged grid/executor machinery.
+    """
+    from repro.hw.profile import Profile
+
+    if isinstance(obj, Profile):
+        selector, sep, rest = path.partition(":")
+        if not sep or not rest:
+            raise ValueError(
+                f"profile field paths are '<selector>:<field.path>' "
+                f"(e.g. 'attn:adc.bits'), got {path!r}")
+        return obj.with_field(selector, rest, value)
     head, _, rest = path.partition(".")
     if rest:
         return dataclasses.replace(
@@ -45,6 +61,15 @@ def set_field(obj, path: str, value):
 
 
 def get_field(obj, path: str):
+    from repro.hw.profile import Profile
+
+    if isinstance(obj, Profile):
+        selector, sep, rest = path.partition(":")
+        if not sep or not rest:
+            raise ValueError(
+                f"profile field paths are '<selector>:<field.path>' "
+                f"(e.g. 'attn:adc.bits'), got {path!r}")
+        return obj.field(selector, rest)
     for name in path.split("."):
         obj = getattr(obj, name)
     return obj
@@ -124,10 +149,15 @@ class SweepSpec:
     as the legacy serial loop did, so vectorized and serial execution are
     seed-equivalent.  ``test_n`` optionally subsamples the test set
     (Sec. 4.3's 1000-image subset trick for expensive parasitic points).
+
+    ``base`` is an :class:`~repro.core.analog.AnalogSpec` or — for
+    heterogeneous serving sweeps — a :class:`repro.hw.Profile`, in which
+    case axis paths are spelled ``"<selector>:<field.path>"``
+    (``Axis("mlp:adc.bits", (4, 6, 8))``).
     """
 
     name: str
-    base: AnalogSpec = dataclasses.field(default_factory=AnalogSpec)
+    base: Any = dataclasses.field(default_factory=AnalogSpec)
     axes: Tuple[Axis, ...] = ()
     explicit: Optional[Tuple[Tuple[str, AnalogSpec], ...]] = None
     trials: int = 5

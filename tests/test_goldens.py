@@ -1,10 +1,13 @@
 """Golden-value regression tests: smoke-grid sweep outputs frozen as
 checked-in JSON, asserted bit-stable across refactors.
 
-The sweeps are the benchmark grids of ``fig8_9_cell_errors`` and
-``fig15_16_adc`` reduced to the smoke protocol (one programming trial per
-point), evaluated fresh (no on-disk cache) on the committed MLP vehicle
-(``benchmarks/_cache/mlp_0.npz``).  Every floating-point accuracy must
+The sweeps are the benchmark grids of ``fig8_9_cell_errors``,
+``fig15_16_adc``, ``fig19_parasitics``, and ``hetero_precision`` reduced
+to the smoke protocol (one programming trial per point), evaluated fresh
+(no on-disk cache) on the trained MLP vehicle (``benchmarks/common``) —
+the ``hetero`` grid runs on the committed trained smoke LM
+(``benchmarks/_cache/lm_qwen1_5-4b_0.npz``) through the heterogeneous
+profile serve path.  Every floating-point accuracy must
 match the golden file *exactly*: the engine is deterministic given
 (weights, seeds, platform, jax version), so any drift is a behaviour
 change — either a bug, or an intentional numerics change that must be
@@ -41,33 +44,51 @@ from repro.sweep import run_sweep
 GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "goldens")
 
 
+def _mlp_evaluator():
+    from benchmarks.common import mlp_evaluator
+
+    return mlp_evaluator()
+
+
+def _lm_evaluator():
+    from benchmarks.lm_accuracy import lm_evaluator
+
+    return lm_evaluator()
+
+
 def _smoke_sweeps():
-    """(name, SweepSpec) for every golden grid, at one trial per point."""
+    """(name, (SweepSpec, evaluator factory)) per golden grid, at one
+    trial per point."""
     from benchmarks.fig8_9_cell_errors import (
         ALPHAS_IND, ALPHAS_PROP, fig_sweep)
     from benchmarks.fig15_16_adc import fig15_sweep, fig16_sweep
     from benchmarks.fig19_parasitics import fig19_sweep
+    from benchmarks.hetero_precision import hetero_sweep
     from repro.core.errors import state_independent, state_proportional
 
     sweeps = [
-        fig_sweep("fig8", state_independent, ALPHAS_IND),
-        fig_sweep("fig9", state_proportional, ALPHAS_PROP),
-        fig15_sweep(),
-        fig16_sweep(),
+        (fig_sweep("fig8", state_independent, ALPHAS_IND), _mlp_evaluator),
+        (fig_sweep("fig9", state_proportional, ALPHAS_PROP), _mlp_evaluator),
+        (fig15_sweep(), _mlp_evaluator),
+        (fig16_sweep(), _mlp_evaluator),
         # thinned Fig. 19 grid: pins the traced-r_hat bit-line solve path
         # (scheme x r_hat, one compile group per scheme) bit-stable
-        fig19_sweep((1e-4, 1e-3), test_n=64),
+        (fig19_sweep((1e-4, 1e-3), test_n=64), _mlp_evaluator),
+        # heterogeneous per-site profile grid on the committed trained LM:
+        # pins the profile resolver -> per-site program -> calibrate ->
+        # serve -> decode chain bit-stable (tag "hetero")
+        (dataclasses.replace(hetero_sweep(smoke=True), name="hetero"),
+         _lm_evaluator),
     ]
     return [
-        (s.name, dataclasses.replace(s, name=f"golden_{s.name}", trials=1))
-        for s in sweeps
+        (s.name,
+         (dataclasses.replace(s, name=f"golden_{s.name}", trials=1), ev))
+        for s, ev in sweeps
     ]
 
 
-def _compute(sweep):
-    from benchmarks.common import mlp_evaluator
-
-    res = run_sweep(sweep, mlp_evaluator())        # fresh, no disk cache
+def _compute(sweep, evaluator_factory):
+    res = run_sweep(sweep, evaluator_factory())    # fresh, no disk cache
     return {r.tag: r.values for r in res}
 
 
@@ -80,7 +101,7 @@ def _jax_minor(version):
 
 
 @pytest.mark.parametrize("name", ["fig8", "fig9", "fig15", "fig16",
-                                  "fig19"])
+                                  "fig19", "hetero"])
 def test_smoke_grid_matches_golden(name):
     path = _golden_path(name)
     assert os.path.exists(path), (
@@ -92,8 +113,8 @@ def test_smoke_grid_matches_golden(name):
         pytest.skip(f"golden generated under jax {golden['jax_version']}, "
                     f"running {jax.__version__}: exact comparison is only "
                     f"meaningful within one jax minor version")
-    sweep = dict(_smoke_sweeps())[name]
-    values = _compute(sweep)
+    sweep, ev = dict(_smoke_sweeps())[name]
+    values = _compute(sweep, ev)
     assert set(values) == set(golden["points"]), (
         "design-point table changed; regenerate goldens if intentional")
     for tag, vals in values.items():
@@ -105,11 +126,11 @@ def test_smoke_grid_matches_golden(name):
 
 def regen():
     os.makedirs(GOLDEN_DIR, exist_ok=True)
-    for name, sweep in _smoke_sweeps():
+    for name, (sweep, ev) in _smoke_sweeps():
         payload = {
             "jax_version": jax.__version__,
             "protocol": sweep.point_protocol(),
-            "points": _compute(sweep),
+            "points": _compute(sweep, ev),
         }
         path = _golden_path(name)
         with open(path, "w") as f:

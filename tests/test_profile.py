@@ -1,0 +1,460 @@
+"""Heterogeneous-profile tests (tier-1): resolver semantics, the
+uniform-profile == global-spec bit-identity contract (codes, programming
+noise, calibration ranges, decode tokens), the per-site serial reference
+for a heterogeneous 2-class profile, layer-band scan splitting, the
+profile sweep-axis/compile-group composition, the continuous-batching
+runtime agreement over a mixed pack, and the ValueError validation /
+dispatch-fallback satellites."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import analog as A
+from repro.core import errors as E
+from repro.core.adc import ADCConfig
+from repro.core.analog import AnalogSpec, program_codes, program_from_codes
+from repro.core.errors import ErrorModel
+from repro.core.mapping import MappingConfig
+from repro.data.synthetic import SyntheticLM
+from repro.hw import DIGITAL, Profile, Rule, as_profile
+from repro.models.registry import get_model
+from repro.serve.analog_engine import (
+    HEAD,
+    calibrate_lm,
+    decode_lm,
+    hook_key,
+    lm_program_codes,
+    program_lm,
+    program_lm_from_codes,
+)
+from repro.sweep.spec import get_field, set_field
+
+SPEC8 = A.design_a(error=E.state_proportional(0.05))
+SPEC6 = dataclasses.replace(SPEC8, adc=dataclasses.replace(SPEC8.adc, bits=6))
+KEY = jax.random.PRNGKey(5)
+
+
+@pytest.fixture(scope="module")
+def lm():
+    cfg = get_smoke_config("qwen1.5-4b")
+    params = get_model(cfg).init_params(cfg, jax.random.PRNGKey(0))
+    ds = SyntheticLM(cfg=cfg, seq_len=16, global_batch=4, seed=0)
+    return cfg, params, ds
+
+
+# ---------------------------------------------------------------------------
+# resolver semantics
+# ---------------------------------------------------------------------------
+
+def test_resolver_patterns_and_fallback():
+    p = Profile(rules=(
+        Rule("wq", SPEC6),                  # exact site name
+        Rule("attn.*", SPEC8),              # class-qualified glob
+        Rule("mlp", SPEC8),                 # bare class
+        Rule("head", DIGITAL),
+    ), default=DIGITAL)
+    assert p.resolve("wq") is SPEC6         # first match wins
+    assert p.resolve("wk") is SPEC8
+    assert p.resolve("w_down") is SPEC8
+    assert p.resolve(HEAD) == DIGITAL
+    assert p.resolve("rwkv_wr") == DIGITAL  # unmatched -> default
+    assert p.is_digital("rwkv_wr") and not p.is_digital("wq")
+
+
+def test_resolver_layer_bands():
+    p = Profile(rules=(
+        Rule("attn.*", SPEC8, layers=(0, 2)),
+        Rule("attn.*", SPEC6, layers=(2, 4)),
+        Rule("mlp.*", SPEC8),
+    ))
+    assert p.resolve("wq", 1) is SPEC8
+    assert p.resolve("wq", 2) is SPEC6
+    assert p.resolve("wq") == DIGITAL       # band rules need a layer index
+    sites = ["wq", "w_up"]
+    assert p.layer_bands(sites, 4) == ((0, 2), (2, 4))
+    assert Profile.uniform(SPEC8).layer_bands(sites, 4) == ((0, 4),)
+    assert p.first_analog("wq", 4) is SPEC8
+
+
+def test_profile_validation_and_as_profile():
+    with pytest.raises(ValueError, match="AnalogSpec or the string"):
+        Profile(rules=(Rule("wq", "analog"),))
+    with pytest.raises(ValueError, match="half-open band"):
+        Rule("wq", SPEC8, layers=(3, 3))
+    with pytest.raises(ValueError, match="expects an AnalogSpec"):
+        Profile.uniform(DIGITAL)
+    with pytest.raises(ValueError, match="AnalogSpec or hw.Profile"):
+        as_profile("nope")
+    assert as_profile(SPEC8).resolve("wq") is SPEC8
+    assert as_profile(Profile.uniform(SPEC8)).resolve("head") is SPEC8
+
+
+def test_with_field_and_sweep_set_field():
+    p = Profile.by_class(attn=SPEC8, mlp=SPEC8, head=DIGITAL)
+    q = set_field(p, "mlp:adc.bits", 6)
+    assert get_field(q, "mlp:adc.bits") == 6
+    assert get_field(q, "attn:adc.bits") == 8
+    assert q.signature() != p.signature()
+    assert set_field(q, "mlp:adc.bits", 8).signature() == p.signature()
+    u = Profile.uniform(SPEC8)
+    assert get_field(set_field(u, "default:error.alpha", 0.1),
+                     "default:error.alpha") == pytest.approx(0.1)
+    with pytest.raises(ValueError, match="no profile rule answers"):
+        p.with_field("ssm", "adc.bits", 6)
+    with pytest.raises(ValueError, match="cannot set"):
+        p.with_field("head", "adc.bits", 6)     # head rule is digital
+    with pytest.raises(ValueError, match="selector"):
+        set_field(p, "adc.bits", 6)             # missing selector
+
+
+# ---------------------------------------------------------------------------
+# uniform profile == global spec (the bit-identity contract)
+# ---------------------------------------------------------------------------
+
+def _pack_arrays(pack):
+    out = {}
+    for name, aw in pack.layer_weights.items():
+        out[f"{name}.g_pos"] = np.asarray(aw.g_pos)
+        if aw.g_neg is not None:
+            out[f"{name}.g_neg"] = np.asarray(aw.g_neg)
+        if aw.g_unit is not None:
+            out[f"{name}.g_unit"] = np.asarray(aw.g_unit)
+    if pack.head is not None:
+        out["head.g_pos"] = np.asarray(pack.head.g_pos)
+    return out
+
+
+def _assert_packs_equal(pa, pb):
+    a, b = _pack_arrays(pa), _pack_arrays(pb)
+    assert set(a) == set(b)
+    for k in a:
+        np.testing.assert_array_equal(a[k], b[k], err_msg=k)
+    for name in pa.layer_lo:
+        np.testing.assert_array_equal(np.asarray(pa.layer_lo[name]),
+                                      np.asarray(pb.layer_lo[name]))
+        np.testing.assert_array_equal(np.asarray(pa.layer_hi[name]),
+                                      np.asarray(pb.layer_hi[name]))
+    np.testing.assert_array_equal(np.asarray(pa.head_lo),
+                                  np.asarray(pb.head_lo))
+    np.testing.assert_array_equal(np.asarray(pa.head_hi),
+                                  np.asarray(pb.head_hi))
+
+
+def _full_chain(cfg, params, ds, spec_like):
+    """codes -> pack -> calibrated pack -> greedy decode tokens."""
+    codes = lm_program_codes(cfg, params, spec_like)
+    pack = program_lm_from_codes(cfg, codes, spec_like, KEY)
+    pack = calibrate_lm(cfg, params, pack, ds.batch(1)["tokens"])
+    toks = decode_lm(cfg, params, ds.batch(2)["tokens"][:2, :6], 3, pack=pack)
+    return codes, pack, np.asarray(toks)
+
+
+def test_uniform_profile_bit_identical_fixed_specs(lm):
+    """Uniform Profile == global AnalogSpec across representative specs:
+    identical codes, programming noise, calibration ranges, decode."""
+    cfg, params, ds = lm
+    specs = [
+        SPEC8,
+        A.design_e(error=E.state_independent(0.03)),
+        AnalogSpec(mapping=MappingConfig(scheme="differential",
+                                         bits_per_cell=2, on_off_ratio=100.0),
+                   adc=ADCConfig(style="none"),
+                   error=E.state_proportional(0.05), max_rows=40),
+    ]
+    for spec in specs:
+        c1, p1, t1 = _full_chain(cfg, params, ds, spec)
+        c2, p2, t2 = _full_chain(cfg, params, ds, Profile.uniform(spec))
+        assert set(c1) == set(c2)
+        for name in c1:
+            np.testing.assert_array_equal(np.asarray(c1[name].codes.c_pos),
+                                          np.asarray(c2[name].codes.c_pos))
+        _assert_packs_equal(p1, p2)
+        np.testing.assert_array_equal(t1, t2)
+
+
+try:                                    # hypothesis is dev-only; keep the
+    import hypothesis  # noqa: F401     # rest of this module collectable
+    _HAVE_HYPOTHESIS = True
+except ImportError:
+    _HAVE_HYPOTHESIS = False
+
+if _HAVE_HYPOTHESIS:
+    from hypothesis import given, settings
+
+    from test_properties import analog_specs
+
+    @given(spec=analog_specs())
+    @settings(max_examples=5, deadline=None)
+    def test_uniform_profile_bit_identical_property(spec, lm):
+        """The whole-design-space version of the contract: ANY valid
+        spec, wrapped uniformly, reproduces the global-spec pack
+        bit-exactly (codes, noise, calibration ranges, decode)."""
+        cfg, params, ds = lm
+        c1, p1, t1 = _full_chain(cfg, params, ds, spec)
+        c2, p2, t2 = _full_chain(cfg, params, ds, Profile.uniform(spec))
+        for name in c1:
+            np.testing.assert_array_equal(np.asarray(c1[name].codes.c_pos),
+                                          np.asarray(c2[name].codes.c_pos))
+        _assert_packs_equal(p1, p2)
+        np.testing.assert_array_equal(t1, t2)
+
+
+# ---------------------------------------------------------------------------
+# heterogeneous 2-class profile vs the per-site serial reference
+# ---------------------------------------------------------------------------
+
+def test_hetero_two_class_matches_per_site_reference(lm):
+    """attn on 8-bit arrays, mlp on 6-bit arrays, head digital: every
+    site's programmed stack must equal programming that site alone with
+    its own spec and the same hook-keyed schedule."""
+    cfg, params, ds = lm
+    profile = Profile.by_class(attn=SPEC8, mlp=SPEC6, head=DIGITAL)
+    pack = program_lm(cfg, params, profile, KEY)
+    assert pack.head is None and pack.head_spec is None
+    assert pack.bands == ((0, cfg.n_layers),)
+
+    site_spec = {"wq": SPEC8, "wk": SPEC8, "wv": SPEC8, "wo": SPEC8,
+                 "w_gate": SPEC6, "w_up": SPEC6, "w_down": SPEC6}
+    assert set(pack.layer_weights) == set(site_spec)
+    groups = {"wq": ("attn", "wq"), "wk": ("attn", "wk"),
+              "wv": ("attn", "wv"), "wo": ("attn", "wo"),
+              "w_gate": ("mlp", "w_gate"), "w_up": ("mlp", "w_up"),
+              "w_down": ("mlp", "w_down")}
+    for name, (parent, leaf) in groups.items():
+        spec = site_spec[name]
+        w_stack = params["layers"][parent][leaf].astype(jnp.float32)
+        pms = jax.vmap(lambda w: program_codes(w, spec))(w_stack)
+        hk = hook_key(KEY, name)
+        keys = jnp.stack([jax.random.fold_in(hk, i)
+                          for i in range(cfg.n_layers)])
+        ref = jax.vmap(lambda c, k: program_from_codes(c, spec, k))(pms, keys)
+        np.testing.assert_array_equal(
+            np.asarray(pack.layer_weights[name].g_pos), np.asarray(ref.g_pos),
+            err_msg=f"{name} differs from the per-site serial reference")
+    # the serving context resolves per site
+    assert pack.site_spec("wq").adc.bits == 8
+    assert pack.site_spec("w_up").adc.bits == 6
+
+    pack = calibrate_lm(cfg, params, pack, ds.batch(1)["tokens"])
+    toks = decode_lm(cfg, params, ds.batch(2)["tokens"][:2, :6], 3, pack=pack)
+    assert toks.shape == (2, 3)
+    assert bool(jnp.all((toks >= 0) & (toks < cfg.vocab)))
+
+
+# ---------------------------------------------------------------------------
+# layer bands
+# ---------------------------------------------------------------------------
+
+def test_two_band_profile_of_one_spec_equals_single_band(lm):
+    """Splitting the scan at an artificial band boundary must not change
+    a single numeric: two bands of the SAME spec == the uniform path."""
+    cfg, params, ds = lm
+    l = cfg.n_layers
+    assert l >= 2, "band test needs >= 2 layers"
+    # band rules only see layer sites; the default serves the head
+    two = Profile(rules=(Rule("*", SPEC8, layers=(0, 1)),
+                         Rule("*", SPEC8, layers=(1, l))), default=SPEC8)
+    _, p1, t1 = _full_chain(cfg, params, ds, Profile.uniform(SPEC8))
+    _, p2, t2 = _full_chain(cfg, params, ds, two)
+    assert p2.bands == ((0, 1), (1, l))
+    _assert_packs_equal(p1, p2)
+    np.testing.assert_array_equal(t1, t2)
+
+
+def test_banded_mixed_precision_and_digital_band(lm):
+    """A depth-banded profile (8-bit early layers, 6-bit late; MLP digital
+    in the first band) programs, calibrates, and serves."""
+    cfg, params, ds = lm
+    l = cfg.n_layers
+    profile = Profile(rules=(
+        Rule("attn.*", SPEC8, layers=(0, 1)),
+        Rule("attn.*", SPEC6, layers=(1, l)),
+        Rule("mlp.*", SPEC6, layers=(1, l)),   # digital in band [0, 1)
+        Rule("head", DIGITAL),
+    ))
+    pack = program_lm(cfg, params, profile, KEY)
+    assert pack.bands == ((0, 1), (1, l))
+    assert "w_up" not in pack.band_specs[0]
+    assert pack.band_specs[1].spec_for("w_up").adc.bits == 6
+    assert pack.band_specs[0].spec_for("wq").adc.bits == 8
+    pack = calibrate_lm(cfg, params, pack, ds.batch(1)["tokens"])
+    toks = decode_lm(cfg, params, ds.batch(2)["tokens"][:2, :6], 3, pack=pack)
+    assert bool(jnp.all((toks >= 0) & (toks < cfg.vocab)))
+
+
+def test_band_geometry_mismatch_rejected(lm):
+    """Bands may vary ADC/error fields but not array geometry (a site's
+    conductance stack is ONE scanned array)."""
+    cfg, params, _ = lm
+    l = cfg.n_layers
+    narrow = dataclasses.replace(SPEC8, max_rows=32)
+    profile = Profile(rules=(
+        Rule("attn.*", SPEC8, layers=(0, 1)),
+        Rule("attn.*", narrow, layers=(1, l)),
+        Rule("mlp.*", SPEC8),
+    ))
+    with pytest.raises(ValueError, match="array\\s+geometry"):
+        program_lm(cfg, params, profile, KEY)
+
+
+def test_all_digital_profile_rejected(lm):
+    cfg, params, _ = lm
+    with pytest.raises(ValueError, match="digital"):
+        lm_program_codes(cfg, params, Profile(rules=(), default=DIGITAL))
+
+
+# ---------------------------------------------------------------------------
+# sweep composition: per-site-class axes, compile groups, codes cache
+# ---------------------------------------------------------------------------
+
+def test_hetero_grid_compile_groups(lm):
+    """attn-bits x mlp-bits x alpha: compile groups == profile
+    signatures (one per (attn, mlp) bits cell, <= one per signature),
+    with the cell-error axis batched as a traced scalar inside each."""
+    from repro.sweep import (
+        Axis, ServeEvaluator, SweepSpec, compile_groups, point_key)
+
+    cfg, params, ds = lm
+    ev = ServeEvaluator(cfg, params, ds.batch(998)["tokens"],
+                        ds.batch(999)["tokens"], ds.batch(999)["targets"])
+    sweep = SweepSpec(
+        name="t",
+        base=Profile.by_class(attn=SPEC8, mlp=SPEC8, head=DIGITAL),
+        axes=(Axis("attn:adc.bits", (6, 8)),
+              Axis("mlp:adc.bits", (6, 8)),
+              Axis("attn:error.alpha", (0.02, 0.05))),
+        trials=1,
+    )
+    pts = sweep.expand()
+    assert len(pts) == 8
+    groups = compile_groups(
+        [(point_key(ev.signature(), p, sweep.point_protocol()), p)
+         for p in pts], ev)
+    sigs = {set_field(p.spec, "attn:error.alpha", 0.0).signature()
+            for p in pts}
+    assert len(groups) == len(sigs) == 4
+    for _, dyn_names, members in groups:
+        assert dyn_names == ("attn:error.alpha",)
+        assert len(members) == 2
+    # codes shared across ADC-bit cells (mapping-identical), per-site keyed
+    k1 = ev._codes_key(pts[0].spec)
+    assert all(ev._codes_key(p.spec) == k1 for p in pts)
+    assert "head=digital" in k1 and "wq=differential" in k1
+
+
+def test_benchmark_sweep_one_group_per_signature(lm):
+    """The shipped hetero_precision grid: every point is its own profile
+    signature and the whole grid compiles in exactly that many groups."""
+    import os
+    import sys
+
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    if root not in sys.path:
+        sys.path.insert(0, root)
+    from benchmarks.hetero_precision import hetero_sweep
+
+    from repro.sweep import ServeEvaluator, compile_groups, point_key
+
+    cfg, params, ds = lm
+    ev = ServeEvaluator(cfg, params, ds.batch(998)["tokens"],
+                        ds.batch(999)["tokens"], ds.batch(999)["targets"])
+    sweep = hetero_sweep()
+    pts = sweep.expand()
+    groups = compile_groups(
+        [(point_key(ev.signature(), p, sweep.point_protocol()), p)
+         for p in pts], ev)
+    assert len(groups) == len({p.spec.signature() for p in pts}) == len(pts)
+
+
+def test_codes_key_head_resolution_matches_program_path(lm):
+    """The codes-cache key must classify the head exactly like
+    lm_program_codes (resolve at layer=None): a banded-rules profile
+    whose head falls to a digital default must not share a key with an
+    analog-head profile (regression: cache poisoning)."""
+    from repro.sweep import ServeEvaluator
+
+    cfg, params, ds = lm
+    ev = ServeEvaluator(cfg, params, ds.batch(998)["tokens"],
+                        ds.batch(999)["tokens"], ds.batch(999)["targets"])
+    l = cfg.n_layers
+    banded = Profile(rules=(Rule("*", SPEC8, layers=(0, l)),),
+                     default=DIGITAL)
+    uniform = Profile.uniform(SPEC8)
+    assert "head=digital" in ev._codes_key(banded)
+    assert "head=digital" not in ev._codes_key(uniform)
+    assert ev._codes_key(banded) != ev._codes_key(uniform)
+    # the keys mirror what lm_program_codes actually builds
+    assert HEAD not in lm_program_codes(cfg, params, banded)
+    assert HEAD in lm_program_codes(cfg, params, uniform)
+
+
+# ---------------------------------------------------------------------------
+# serving runtime over a heterogeneous pack
+# ---------------------------------------------------------------------------
+
+def test_runtime_agreement_heterogeneous_pack(lm):
+    """A running ServeRuntime serves a mixed-precision pack unchanged:
+    greedy token agreement with per-request decode_lm is exactly 1.0."""
+    from repro.sweep.serve_eval import runtime_agreement
+
+    cfg, params, ds = lm
+    profile = Profile.by_class(attn=SPEC8, mlp=SPEC6, head=DIGITAL)
+    pack = program_lm(cfg, params, profile, KEY)
+    pack = calibrate_lm(cfg, params, pack, ds.batch(1)["tokens"])
+    toks = np.asarray(ds.batch(3)["tokens"])
+    reqs = [(toks[0, :5], 4), (toks[1, :3], 5), (toks[2, :7], 3)]
+    assert runtime_agreement(cfg, params, reqs, pack=pack,
+                             max_slots=2, seed=0) == 1.0
+
+
+# ---------------------------------------------------------------------------
+# satellites: ValueError validation + dispatch fallback
+# ---------------------------------------------------------------------------
+
+def test_core_validation_value_errors():
+    with pytest.raises(ValueError, match="input_accum"):
+        AnalogSpec(input_accum="wrong")
+    with pytest.raises(ValueError, match="input_bits"):
+        AnalogSpec(input_bits=0)
+    with pytest.raises(ValueError, match="ErrorModel.kind"):
+        ErrorModel(kind="gaussian")
+    with pytest.raises(ValueError, match="MappingConfig.scheme"):
+        MappingConfig(scheme="dual")
+    with pytest.raises(ValueError, match="bits_per_cell"):
+        MappingConfig(bits_per_cell=3)
+    with pytest.raises(ValueError, match="unit_column"):
+        MappingConfig(scheme="differential", unit_column=True)
+    with pytest.raises(ValueError, match="ADCConfig.style"):
+        ADCConfig(style="sar")
+
+
+def test_analog_matmul_mismatch_value_error():
+    spec = AnalogSpec(adc=ADCConfig(style="none"))
+    aw = A.program(jnp.ones((8, 3)), spec)
+    with pytest.raises(ValueError, match="depth 7 does not match"):
+        A.analog_matmul(jnp.ones((2, 7)), aw, spec)
+    with pytest.raises(ValueError, match="2-D"):
+        A.program(jnp.ones((2, 3, 4)), spec)
+    cal_spec = AnalogSpec(adc=ADCConfig(style="calibrated"))
+    aw2 = A.program(jnp.ones((8, 3)), cal_spec)
+    with pytest.raises(ValueError, match="calibrated"):
+        A.analog_matmul(jnp.ones((2, 8)), aw2, cal_spec)
+
+
+def test_shard_fallback_returns_inputs_unsharded():
+    """When neither the point nor the trial axis divides the mesh, the
+    batch is replicated explicitly — the exact input arrays come back."""
+    from repro.sweep.dispatch import shard_point_trial_batch
+
+    class _Mesh:
+        shape = {"data": 3}
+
+    dyn = jnp.ones((4, 2))
+    keys = jnp.zeros((5, 2), jnp.uint32)
+    d2, k2 = shard_point_trial_batch(dyn, keys, _Mesh())
+    assert d2 is dyn and k2 is keys
