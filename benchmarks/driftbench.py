@@ -1,0 +1,167 @@
+"""Self-healing analog serving under conductance drift + stuck-cell faults.
+
+The paper evaluates accelerators at programming time; a deployed chip
+keeps aging afterwards — conductances decay by the retention power law
+``g(t) = g0 * (t/t0)^-nu`` (per-cell lognormal exponents) and cells fail
+as a Poisson process pinned at G_min/G_max (related work: Rasch et al.,
+arXiv:2302.08469; Wan et al., arXiv:2008.02400).  This benchmark measures
+both halves of that story on the trained smoke LM:
+
+1. **Degradation surface** — a ``ServeEvaluator`` sweep over drift
+   exponent ``drift.nu`` × device age (``drift.t``/``fault.t`` zipped):
+   program → calibrate → serve per design point.  Kind is static,
+   horizon and magnitude are traced (``AnalogSpec.aging_on``), so the
+   whole age grid is one compile group per shape — the same
+   static-vs-traced split that collapses the Fig. 19 parasitic axis.
+2. **Healing** — the same mixed trace served twice through
+   ``ServeRuntime`` with a ``PackManager`` + ``DriftClock`` aging the
+   pack as decode steps accumulate: once with no ``HealPolicy`` (the
+   pack just ages) and once self-healing (probe loss vs fresh-pack
+   reference triggers band-by-band background reprogramming between
+   decode steps + recalibration, in-flight requests untouched).
+
+Claims (**gated** — the benchmark raises, and ``benchmarks.run`` exits
+nonzero, when they fail):
+
+* heal-on serves a pack whose calibration-probe loss stays within the
+  ``tests/test_system.py`` tolerance of the fresh pack
+  (``loss < ref * 1.35 + 0.2``) at the end of the trace;
+* heal-off degrades measurably: its final probe loss breaks that same
+  tolerance (otherwise the horizon is too soft to demonstrate anything).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.analog import design_a
+from repro.core.errors import power_law_drift, state_proportional, stuck_faults
+from repro.serve import DriftClock, HealPolicy, PackManager, ServeRuntime
+from repro.sweep import Axis, SweepSpec
+
+from benchmarks.common import Timer, emit, run_bench_sweep, trials_for
+from benchmarks.lm_accuracy import CALIB_STEP, lm_evaluator, trained_lm
+
+#: Design A under proportional cell error, aging with the literature's
+#: canonical retention exponent (nu ~ 0.2, lognormal per-cell spread)
+#: and a stuck-cell arrival rate of 1e-5 per cell per t0 of age.
+DRIFT_SPEC = design_a(
+    error=state_proportional(0.05),
+    drift=power_law_drift(0.2, sigma_nu=0.3),
+    fault=stuck_faults(1e-5),
+)
+
+NU_VALUES = (0.1, 0.2, 0.3)
+HORIZONS = (1.0, 16.0, 64.0, 256.0, 1024.0)
+
+#: the test_system tolerance formula, against the fresh-pack reference
+TOL = "loss < ref * 1.35 + 0.2"
+
+#: healing trace: enough decode steps (requests x budget / slots) for the
+#: drift clock to reach HEAL_HORIZON with several health probes en route
+N_REQUESTS, MAX_NEW, MAX_SLOTS = 8, 8, 2
+HEAL_HORIZON = 256.0
+
+
+def within_tol(loss: float, ref: float) -> bool:
+    return loss < ref * 1.35 + 0.2
+
+
+def drift_sweep(*, smoke: bool = False) -> SweepSpec:
+    """The drift-exponent × device-age serving grid.
+
+    ``drift.t`` and ``fault.t`` are zipped into one age axis (a device
+    ages as a whole); ``smoke`` thins to the canonical nu over three
+    ages — still the fresh-age bit-identity anchor (t=1 must reproduce
+    the no-aging loss) plus a degrading tail for the CI gate.
+    """
+    nus = (0.2,) if smoke else NU_VALUES
+    ages = (1.0, 64.0, 256.0) if smoke else HORIZONS
+    return SweepSpec(
+        name="driftbench_smoke" if smoke else "driftbench",
+        base=DRIFT_SPEC,
+        axes=(
+            Axis("drift.nu", nus, labels=tuple(f"nu{v:g}" for v in nus)),
+            Axis(("drift.t", "fault.t"), tuple((t, t) for t in ages),
+                 labels=tuple(f"t{t:g}" for t in ages)),
+        ),
+        trials=trials_for(3),
+        seed=1234,
+    )
+
+
+def request_trace(vocab: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    return [
+        (rng.integers(0, vocab, size=int(rng.integers(3, 9))).astype(np.int32),
+         MAX_NEW)
+        for _ in range(N_REQUESTS)
+    ]
+
+
+def serve_aging(cfg, params, calib, reqs, *, heal: bool):
+    """Drain ``reqs`` through a runtime whose pack ages on a drift clock;
+    returns (final probe loss, final device age, stats, manager)."""
+    import jax
+
+    m = PackManager(cfg, params, DRIFT_SPEC, jax.random.PRNGKey(1234),
+                    calib_tokens=calib)
+    # total decode steps ~= N_REQUESTS * MAX_NEW / MAX_SLOTS; scale the
+    # per-step aging so the trace ends around HEAL_HORIZON
+    steps_est = N_REQUESTS * MAX_NEW / MAX_SLOTS
+    clock = DriftClock(dt_per_step=HEAL_HORIZON / steps_est, update_every=8)
+    policy = HealPolicy(check_every=8, bands_per_step=1) if heal else None
+    rt = ServeRuntime(cfg, params, manager=m, max_slots=MAX_SLOTS,
+                      max_len=24, clock=clock, heal=policy)
+    for i, (p, n) in enumerate(reqs):
+        rt.submit(p, max_new_tokens=n, uid=i)
+    out = rt.run()
+    assert len(out) == len(reqs)
+    s = rt.stats
+    return m.probe_loss(rt.pack), clock.at(s["decode_steps"]), s, m
+
+
+def main(timer: Timer):
+    from benchmarks import common
+
+    cfg, ds, params = trained_lm()
+    calib = ds.batch(CALIB_STEP)["tokens"]
+
+    # 1) degradation surface: nu x age, one compile group per shape
+    sweep = drift_sweep(smoke=common.SMOKE)
+    res = run_bench_sweep(sweep, lm_evaluator())
+    trials = max(sweep.trials, 1)
+    for r in res:
+        emit(f"driftbench_{r.tag}", r.wall_s * 1e6 / trials,
+             f"loss={r.metric_mean('loss'):.4f} "
+             f"top1={r.metric_mean('top1'):.4f} "
+             f"decode_match={r.metric_mean('decode_match'):.2f}")
+
+    # 2) self-healing vs unhealed serving on the same trace
+    reqs = request_trace(cfg.vocab)
+    l_noheal, t_end, s_off, m = serve_aging(cfg, params, calib, reqs,
+                                            heal=False)
+    ref = m.ref_loss
+    emit("driftbench_ref", 0.0, f"loss={ref:.4f} tol={ref * 1.35 + 0.2:.4f}")
+    emit("driftbench_noheal", 0.0,
+         f"loss={l_noheal:.4f} t={t_end:.0f} steps={s_off['decode_steps']}")
+
+    l_heal, t_end, s_on, _ = serve_aging(cfg, params, calib, reqs, heal=True)
+    emit("driftbench_heal", 0.0,
+         f"loss={l_heal:.4f} t={t_end:.0f} "
+         f"heals={s_on['heal_events']} bands={s_on['bands_reprogrammed']} "
+         f"recals={s_on['recalibrations']}")
+
+    if not within_tol(l_heal, ref):
+        raise RuntimeError(
+            f"self-healing failed to hold the served pack within tolerance: "
+            f"probe loss {l_heal:.4f} vs fresh {ref:.4f} ({TOL}) after "
+            f"{s_on['heal_events']} heal events")
+    if within_tol(l_noheal, ref):
+        raise RuntimeError(
+            f"unhealed serving did not degrade past tolerance by t={t_end:.0f} "
+            f"(probe loss {l_noheal:.4f} vs fresh {ref:.4f}, {TOL}); the "
+            f"horizon is too soft to demonstrate healing")
+    emit("driftbench_claim_heal_within_tol", 0.0,
+         f"heal={l_heal:.4f} <= tol={ref * 1.35 + 0.2:.4f} "
+         f"while noheal={l_noheal:.4f} breaks it ({TOL})")

@@ -14,9 +14,11 @@ serving sweeps (``lm_accuracy`` — program → calibrate → serve end to
 end, including the serving-scale parasitic axis), the heterogeneous
 per-site precision grid (``hetero_precision`` — mixed attn/MLP ADC
 bits through ``repro.hw.Profile``, with the matched-loss claim gate),
-and the serving runtime (``servebench`` — continuous vs static
-batching, with the runtime-vs-``decode_lm`` agreement gate); one
-programming trial per point, fresh (uncached) evaluation.
+the serving runtime (``servebench`` — continuous vs static
+batching, with the runtime-vs-``decode_lm`` agreement gate), and the
+drift/fault aging story (``driftbench`` — the nu × device-age
+degradation surface plus the self-healing-vs-unhealed serving gate);
+one programming trial per point, fresh (uncached) evaluation.
 """
 
 import argparse
@@ -37,12 +39,13 @@ MODULES = [
     "lm_accuracy",
     "hetero_precision",
     "servebench",
+    "driftbench",
     "kernelbench",
     "roofline",
 ]
 
 SMOKE_MODULES = ["fig10_onoff", "fig19_parasitics", "lm_accuracy",
-                 "hetero_precision", "servebench"]
+                 "hetero_precision", "servebench", "driftbench"]
 
 
 def main() -> None:

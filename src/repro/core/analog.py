@@ -36,7 +36,7 @@ import jax.numpy as jnp
 
 from repro.core import adc as adc_lib
 from repro.core import parasitics
-from repro.core.errors import ErrorModel
+from repro.core.errors import DriftModel, ErrorModel, FaultModel
 from repro.core.mapping import (
     MappingConfig,
     ProgrammedCodes,
@@ -67,6 +67,8 @@ class AnalogSpec:
     r_hat: float = 0.0                # normalized parasitic resistance
     use_pallas: bool = False
     compute_dtype: jnp.dtype = jnp.float32
+    drift: DriftModel = dataclasses.field(default_factory=DriftModel)
+    fault: FaultModel = dataclasses.field(default_factory=FaultModel)
 
     def __post_init__(self):
         if self.input_accum not in ("analog", "digital"):
@@ -94,6 +96,14 @@ class AnalogSpec:
         compiled program, never a traced value.
         """
         return not parasitics.parasitics_off(self.r_hat)
+
+    @property
+    def aging_on(self) -> bool:
+        """Static program-structure bit: any time-dependent device-state
+        process in-graph?  Like :attr:`parasitics_on`, the *kind* of each
+        process is compile-time while its magnitude (``drift.nu``,
+        ``drift.t``, ``fault.rate``, ``fault.t``) may be traced."""
+        return self.drift.kind != "none" or self.fault.kind != "none"
 
     @property
     def n_planes(self) -> int:
@@ -232,6 +242,10 @@ def program_from_codes(
         g_neg = spec.error.perturb(g_neg, kn) if g_neg is not None else None
         g_unit = spec.error.perturb(g_unit, ku) if g_unit is not None else None
 
+    if spec.aging_on and key is not None:
+        g_pos, g_neg, g_unit = age_conductances(
+            g_pos, g_neg, g_unit, spec, jax.random.fold_in(key, _AGE_FOLD))
+
     dt = spec.compute_dtype
     return AnalogWeights(
         g_pos=g_pos.astype(dt),
@@ -241,6 +255,50 @@ def program_from_codes(
         k=k,
         n=n,
     )
+
+
+#: disjoint fold tag for aging keys — programming noise consumes ``key``
+#: via ``split``, so folding keeps the two RNG streams independent and
+#: leaves the error-model draws bit-identical when aging is off.
+_AGE_FOLD = 0x616765  # "age"
+
+
+def age_conductances(
+    g_pos: jax.Array,
+    g_neg: Optional[jax.Array],
+    g_unit: Optional[jax.Array],
+    spec: AnalogSpec,
+    key: jax.Array,
+    *,
+    t_drift=None,
+    t_fault=None,
+) -> Tuple[jax.Array, Optional[jax.Array], Optional[jax.Array]]:
+    """Apply ``spec.drift`` then ``spec.fault`` to a conductance stack.
+
+    Drift decays the programmed (noise-perturbed) values; faults pin
+    cells afterwards — a stuck cell reads its stuck value regardless of
+    what was programmed into it.  ``t_drift``/``t_fault`` default to the
+    spec's own evaluation ages (``spec.drift.t`` / ``spec.fault.t``);
+    the serving-side healer overrides them per band
+    (``repro.serve.health``: drift restarts at each reprogram, faults
+    accumulate in absolute time).  At ``t = 1`` both passes are
+    bit-identical no-ops.
+    """
+    td = spec.drift.t if t_drift is None else t_drift
+    tf = spec.fault.t if t_fault is None else t_fault
+    kd, kf = jax.random.split(key)
+    gs = [g_pos, g_neg, g_unit]
+    if spec.drift.kind != "none":
+        gs = [spec.drift.apply(g, td, jax.random.fold_in(kd, i))
+              if g is not None else None
+              for i, g in enumerate(gs)]
+    if spec.fault.kind != "none":
+        g_lo = spec.mapping.g_min
+        gs = [spec.fault.apply(g, tf, jax.random.fold_in(kf, i),
+                               g_lo=g_lo, g_hi=1.0)
+              if g is not None else None
+              for i, g in enumerate(gs)]
+    return gs[0], gs[1], gs[2]
 
 
 def program(

@@ -12,6 +12,13 @@ Gaussian noise whose standard deviation depends on the model:
 
 Errors are *program-time*: sampled once per programmed chip from an explicit
 PRNG key, then frozen.  The paper's "10 trials" become 10 vmapped keys.
+
+Device state is additionally *time-dependent* (related work: Rasch et al.,
+arXiv:2302.08469; Wan et al., arXiv:2008.02400): :class:`DriftModel` decays
+programmed conductances by the retention power law and :class:`FaultModel`
+pins stuck-at cells arriving as a Poisson process.  Both are disabled by
+default, keyed like programming errors, and exactly the identity at the
+fresh age ``t = t0`` — see DESIGN.md §Drift-and-healing.
 """
 
 from __future__ import annotations
@@ -82,6 +89,106 @@ class ErrorModel:
         return out
 
 
+@dataclasses.dataclass(frozen=True)
+class DriftModel:
+    """Time-dependent conductance decay; ``kind = 'none'`` disables it.
+
+    ``power_law`` is the standard retention model of charge-trap /
+    phase-change cells: ``g(t) = g0 * (t/t0)^-nu`` with the *per-cell*
+    exponent drawn once per device as ``nu_cell = nu * exp(sigma_nu * z)``,
+    ``z ~ N(0, 1)`` — lognormal around the median ``nu``, strictly
+    positive, so conductance only decays.  ``t`` is the evaluation age in
+    units of the programming-reference time ``t0`` (``t = 1`` is a fresh
+    device) and may be a *traced* scalar, like ``nu`` — the sweep engine
+    batches whole horizon × nu grids through one compilation
+    (``repro.sweep.evaluate.dynamic_fields_for``).
+
+    Drift composes with :class:`ErrorModel`: programming noise perturbs
+    the target conductance, then drift decays the *programmed* value.
+    At ``t = 1`` the decay factor is exactly ``1.0^-nu_cell == 1.0``, so
+    ``apply`` is a bit-identical no-op on a fresh device (pinned by
+    ``tests/test_properties.py``).
+    """
+
+    kind: str = "none"          # none | power_law
+    nu: float = 0.0             # median drift exponent
+    sigma_nu: float = 0.0      # lognormal spread of the per-cell exponent
+    t: float = 1.0              # evaluation age in t0 units (1.0 = fresh)
+
+    def __post_init__(self):
+        kinds = ("none", "power_law")
+        if self.kind not in kinds:
+            raise ValueError(
+                f"DriftModel.kind must be one of {kinds}, got {self.kind!r}")
+
+    def exponents(self, shape, key: jax.Array, dtype) -> jax.Array:
+        """Per-cell drift exponents (a fixed device property per key)."""
+        z = jax.random.normal(key, shape, dtype=dtype)
+        return self.nu * jnp.exp(self.sigma_nu * z)
+
+    def factor(self, shape, t, key: jax.Array, dtype=jnp.float32) -> jax.Array:
+        """Per-cell decay factor ``(t/t0)^-nu_cell`` (clamped to ages
+        >= t0: the power law is a *retention* model, not an oracle for
+        the programming transient)."""
+        tc = jnp.maximum(jnp.asarray(t, dtype), 1.0)
+        return tc ** (-self.exponents(shape, key, dtype))
+
+    def apply(self, g: jax.Array, t, key: Optional[jax.Array]) -> jax.Array:
+        """Decay programmed conductances from age t0 to age ``t``."""
+        if self.kind == "none" or key is None:
+            return g
+        return g * self.factor(g.shape, t, key, g.dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultModel:
+    """Stuck-at cell faults arriving as a seeded Poisson process.
+
+    Each cell fails independently at rate ``rate`` (expected failures per
+    cell per ``t0`` of age), so by age ``t`` it is stuck with probability
+    ``1 - exp(-rate * (t - 1))``; a stuck cell reads ``G_max`` with
+    probability ``p_hi``, else ``G_min``.  The per-cell arrival threshold
+    and high/low choice are drawn once from the key, which makes fault
+    masks *replayable* (same key + same t = bit-identical mask) and
+    arrivals *monotone* (the stuck set at ``t1`` is a subset of the stuck
+    set at ``t2 > t1``) — a cell that failed stays failed, including
+    across reprogramming (reprogram pulses cannot heal a broken device).
+    ``rate`` and ``t`` are tracer-safe.
+    """
+
+    kind: str = "none"          # none | stuck
+    rate: float = 0.0           # expected failures per cell per t0 of age
+    p_hi: float = 0.5           # fraction of stuck cells stuck at G_max
+    t: float = 1.0              # evaluation age in t0 units (1.0 = fresh)
+
+    def __post_init__(self):
+        kinds = ("none", "stuck")
+        if self.kind not in kinds:
+            raise ValueError(
+                f"FaultModel.kind must be one of {kinds}, got {self.kind!r}")
+        if not 0.0 <= self.p_hi <= 1.0:
+            raise ValueError(
+                f"FaultModel.p_hi must sit in [0, 1], got {self.p_hi}")
+
+    def stuck_prob(self, t, dtype=jnp.float32) -> jax.Array:
+        """P(cell has failed by age ``t``) under Poisson arrivals."""
+        dt = jnp.maximum(jnp.asarray(t, dtype), 1.0) - 1.0
+        return -jnp.expm1(-self.rate * dt)
+
+    def apply(self, g: jax.Array, t, key: Optional[jax.Array], *,
+              g_lo=0.0, g_hi=1.0) -> jax.Array:
+        """Pin failed cells to ``g_lo``/``g_hi`` (normalized G_min/G_max)."""
+        if self.kind == "none" or key is None:
+            return g
+        ka, kh = jax.random.split(key)
+        u = jax.random.uniform(ka, g.shape, dtype=g.dtype)
+        stuck = u < self.stuck_prob(t, g.dtype)
+        hi = jax.random.uniform(kh, g.shape, dtype=g.dtype) < self.p_hi
+        val = jnp.where(hi, jnp.asarray(g_hi, g.dtype),
+                        jnp.asarray(g_lo, g.dtype))
+        return jnp.where(stuck, val, g)
+
+
 def state_independent(alpha: float) -> ErrorModel:
     return ErrorModel(kind="state_independent", alpha=alpha)
 
@@ -96,3 +203,13 @@ def sonos() -> ErrorModel:
 
 def none() -> ErrorModel:
     return ErrorModel(kind="none")
+
+
+def power_law_drift(nu: float, sigma_nu: float = 0.0,
+                    t: float = 1.0) -> DriftModel:
+    return DriftModel(kind="power_law", nu=nu, sigma_nu=sigma_nu, t=t)
+
+
+def stuck_faults(rate: float, p_hi: float = 0.5,
+                 t: float = 1.0) -> FaultModel:
+    return FaultModel(kind="stuck", rate=rate, p_hi=p_hi, t=t)

@@ -93,6 +93,20 @@ class AnalogPack:
                 return s
         raise KeyError(f"site {name!r} is not analog in any band of this pack")
 
+    def age(self, t, key: jax.Array) -> "AnalogPack":
+        """Deterministic device state of this pack at age ``t`` (units of
+        the programming-reference time t0; ``t = 1`` is fresh).
+
+        Applies each site's own drift/fault models
+        (``repro.core.errors``) with keys folded from the same stable
+        hook-name hashes as programming, so aging is replayable and
+        band-structure-invariant; bit-identical to ``self`` at ``t = 1``
+        or with aging disabled.  See ``repro.serve.analog_engine.age_pack``.
+        """
+        from repro.serve.analog_engine import age_pack
+
+        return age_pack(self, t, key)
+
 
 # ---------------------------------------------------------------------------
 # init

@@ -7,7 +7,14 @@ replay), and slow nodes.  This module provides the single-process pieces:
 * ``resilient_step`` — retries a step on transient errors with exponential
   backoff; non-transient (deterministic) errors re-raise immediately.
   After ``max_retries`` it raises ``StepFailed`` so the launcher can
-  checkpoint-restart (or shrink the mesh — see ``elastic.py``).
+  checkpoint-restart (or shrink the mesh — see ``elastic.py``).  What
+  counts as transient is deliberately narrow (:func:`is_transient`):
+  connection/timeout OS errors, plus XLA runtime errors whose message
+  carries an explicitly-transient RPC status (UNAVAILABLE, DEADLINE
+  EXCEEDED, ...).  A bare ``RuntimeError`` is *not* transient — retrying
+  a deterministic failure (shape error, NaN guard, assertion) just burns
+  ``max_retries`` walltime before failing anyway, and in the serving
+  heal path would triple-program a band for nothing.
 * ``StragglerMonitor`` — tracks per-step wall times, flags ``> mean +
   k*std`` outliers, and calls an eviction hook.  On multi-pod deployments
   the hook would demote the slow host and trigger an elastic restart; here
@@ -24,11 +31,46 @@ import threading
 import time
 from typing import Callable, List, Optional, Tuple
 
-TRANSIENT_ERRORS = (OSError, RuntimeError)
+#: exception types that are transient *by construction* — lost
+#: connections and timeouts get retried, everything else re-raises.
+#: (``OSError``/``RuntimeError`` wholesale would swallow deterministic
+#: failures: FileNotFoundError is an OSError, XLA shape errors are
+#: RuntimeErrors.)
+TRANSIENT_ERRORS = (
+    ConnectionError,
+    TimeoutError,
+    InterruptedError,
+)
+
+#: RPC status fragments marking a jaxlib ``XlaRuntimeError`` (a
+#: RuntimeError subclass with no stable taxonomy of its own) as
+#: transient: gRPC/absl status codes of retryable distributed-runtime
+#: failures, plus device-side transfer hiccups.
+TRANSIENT_XLA_MESSAGES = (
+    "UNAVAILABLE",
+    "DEADLINE_EXCEEDED",
+    "DEADLINE EXCEEDED",
+    "ABORTED",
+    "RESOURCE_EXHAUSTED",
+    "RESOURCE EXHAUSTED",
+    "failed to transfer",
+    "connection reset",
+)
 
 
 class StepFailed(RuntimeError):
     pass
+
+
+def is_transient(e: BaseException) -> bool:
+    """Is ``e`` worth retrying?  Explicit transient types, or an XLA
+    runtime error whose status string is on the transient allowlist."""
+    if isinstance(e, TRANSIENT_ERRORS):
+        return True
+    if type(e).__name__ == "XlaRuntimeError":
+        msg = str(e).upper()
+        return any(frag.upper() in msg for frag in TRANSIENT_XLA_MESSAGES)
+    return False
 
 
 def resilient_step(
@@ -36,7 +78,7 @@ def resilient_step(
     *args,
     max_retries: int = 3,
     backoff_s: float = 0.05,
-    transient: Tuple = TRANSIENT_ERRORS,
+    transient: Optional[Tuple] = None,
     on_retry: Optional[Callable[[int, BaseException], None]] = None,
     **kwargs,
 ):
@@ -44,7 +86,11 @@ def resilient_step(
     while True:
         try:
             return fn(*args, **kwargs)
-        except transient as e:  # pragma: no branch
+        except Exception as e:
+            retryable = (is_transient(e) if transient is None
+                         else isinstance(e, transient))
+            if not retryable:
+                raise
             attempt += 1
             if on_retry is not None:
                 on_retry(attempt, e)

@@ -1,8 +1,10 @@
 """Serve a trained LM analogly: program + calibrate (``analog_engine``),
-one-shot batched decode (``decode_lm``), and the continuous-batching
-request runtime (``runtime``)."""
+one-shot batched decode (``decode_lm``), the continuous-batching request
+runtime (``runtime``), and device-state management over time — drift,
+stuck-cell faults, recalibration, band reprogramming (``health``)."""
 
 from repro.serve.analog_engine import (
+    age_pack,
     analog_eval_loss,
     analog_eval_metrics,
     calibrate_lm,
@@ -11,6 +13,7 @@ from repro.serve.analog_engine import (
     program_lm,
     program_lm_from_codes,
 )
+from repro.serve.health import DriftClock, HealPolicy, PackManager
 from repro.serve.runtime import (
     Completion,
     SamplerConfig,
@@ -21,6 +24,7 @@ from repro.serve.runtime import (
 )
 
 __all__ = [
+    "age_pack",
     "analog_eval_loss",
     "analog_eval_metrics",
     "calibrate_lm",
@@ -28,6 +32,9 @@ __all__ = [
     "lm_program_codes",
     "program_lm",
     "program_lm_from_codes",
+    "DriftClock",
+    "HealPolicy",
+    "PackManager",
     "Completion",
     "SamplerConfig",
     "ServeRuntime",

@@ -297,6 +297,84 @@ def _program_site_stack(pm: ProgrammedMatrix,
     return jax.tree.map(lambda *p: jnp.concatenate(p, axis=0), *parts)
 
 
+def _age_weights(aw: AnalogWeights, spec: AnalogSpec, t_drift, t_fault,
+                 key: jax.Array) -> AnalogWeights:
+    """Drift + fault one programmed matrix to the given ages."""
+    from repro.core.analog import age_conductances
+
+    g_pos, g_neg, g_unit = age_conductances(
+        aw.g_pos, aw.g_neg, aw.g_unit, spec, key,
+        t_drift=t_drift, t_fault=t_fault)
+    return dataclasses.replace(aw, g_pos=g_pos, g_neg=g_neg, g_unit=g_unit)
+
+
+def _age_site_stack(aw: AnalogWeights,
+                    specs_per_band: List[Optional[AnalogSpec]],
+                    bands: Tuple[Tuple[int, int], ...],
+                    key: jax.Array,
+                    t_drift_by_band: List[float],
+                    t_fault_by_band: List[float]) -> AnalogWeights:
+    """Age one site's layer stack, per band, mirroring the programming
+    key schedule (``fold_in(site key, absolute layer)``) so aging is
+    band-structure-invariant and replayable."""
+    parts = []
+    for (lo, hi), sp, td, tf in zip(bands, specs_per_band,
+                                    t_drift_by_band, t_fault_by_band):
+        sub = jax.tree.map(lambda a: a[lo:hi], aw)
+        if sp is None or not sp.aging_on:
+            parts.append(sub)
+            continue
+        keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(
+            jnp.arange(lo, hi))
+        parts.append(jax.vmap(
+            lambda w, k: _age_weights(w, sp, td, tf, k))(sub, keys))
+    if len(parts) == 1:
+        return parts[0]
+    return jax.tree.map(lambda *p: jnp.concatenate(p, axis=0), *parts)
+
+
+def age_pack(pack: AnalogPack, t, key: jax.Array, *,
+             t_drift_by_band=None, t_fault_by_band=None) -> AnalogPack:
+    """Deterministic device state of ``pack`` at age ``t`` (t0 units).
+
+    Applies each site's own :class:`~repro.core.errors.DriftModel` /
+    :class:`~repro.core.errors.FaultModel` (per band — heterogeneous
+    profiles age heterogeneously) to the pack's conductances.  Keys fold
+    exactly like programming keys — ``fold_in(hook_key(key, name),
+    absolute_layer)`` — so aging is replayable (same pack, t, key =
+    bit-identical result) and cache-safe.  At ``t = 1``, or with every
+    drift/fault model disabled, the returned pack is bit-identical to
+    ``pack`` (the all-disabled case returns ``pack`` itself).
+
+    ``t_drift_by_band``/``t_fault_by_band`` override the uniform ``t``
+    per band (the healer's per-band reprogram ages); the head always
+    ages at the uniform ``t``.
+    """
+    n_bands = len(pack.bands)
+    td = list(t_drift_by_band) if t_drift_by_band is not None \
+        else [t] * n_bands
+    tf = list(t_fault_by_band) if t_fault_by_band is not None \
+        else [t] * n_bands
+    changed = False
+    layer_weights = {}
+    for name, aw in pack.layer_weights.items():
+        specs = [ss.get(name) for ss in pack.band_specs]
+        if not any(s is not None and s.aging_on for s in specs):
+            layer_weights[name] = aw
+            continue
+        changed = True
+        layer_weights[name] = _age_site_stack(
+            aw, specs, pack.bands, hook_key(key, name), td, tf)
+    head = pack.head
+    if head is not None and pack.head_spec.aging_on:
+        changed = True
+        head = _age_weights(head, pack.head_spec, t, t,
+                            hook_key(key, HEAD))
+    if not changed:
+        return pack
+    return dataclasses.replace(pack, layer_weights=layer_weights, head=head)
+
+
 def program_lm(cfg: ModelConfig, params: dict, spec: SpecLike,
                key: jax.Array, *, include_head: bool = True) -> AnalogPack:
     """Program the LM's weight-stationary projections onto analog arrays.
@@ -312,8 +390,16 @@ def program_lm(cfg: ModelConfig, params: dict, spec: SpecLike,
 def calibrate_lm(cfg: ModelConfig, params: dict, pack: AnalogPack,
                  calib_tokens: jax.Array,
                  prefix_embeds=None) -> AnalogPack:
-    """Two-phase range calibration; returns a serving-ready pack."""
+    """Two-phase range calibration; returns a serving-ready pack.
+
+    Idempotent: any calibration already on ``pack`` is stripped before
+    the collect passes, so recalibrating an aged/healed pack is a pure
+    function of (conductances, tokens) — otherwise the installed clips
+    would perturb the collected statistics and calibration would walk on
+    every heal (``repro.serve.health.PackManager.recalibrate``)."""
     api = get_model(cfg)
+    pack = dataclasses.replace(pack, layer_lo={}, layer_hi={}, layer_act={},
+                               head_lo=None, head_hi=None, head_act=None)
 
     # ---- phase 1: activation clip ranges (digital run, collect inputs) ---
     pack1 = dataclasses.replace(pack, collect=True)

@@ -1,0 +1,301 @@
+"""Self-healing analog serving: device-state management over time.
+
+A programmed pack is not immortal: conductances drift (power-law
+retention decay) and cells fail (stuck-at faults) — the processes of
+``repro.core.errors.DriftModel`` / ``FaultModel``.  This module owns the
+serving side of that story (DESIGN.md §Drift-and-healing):
+
+* :class:`DriftClock` — maps the runtime's decode-step counter to a
+  physical device age ``t`` (in units of the programming-reference time
+  t0), so wall-clock aging is deterministic per served trace;
+* :class:`HealPolicy` — the step-budgeted response: how often to probe
+  health, the probe-loss threshold (the ``tests/test_system.py``
+  tolerance by default), and the per-scheduler-step reprogram budget;
+* :class:`PackManager` — owns a pack's full device state: the programmed
+  integer codes, per-band reprogram epochs (which key the re-drawn
+  programming noise), the aging clocks of each band, recalibration, and
+  the calibration-probe loss against the fresh-pack reference.
+
+Determinism contract: everything replays.  Aging keys fold from stable
+hook-name hashes (``analog_engine.age_pack``); reprogram epoch ``e`` of
+band ``b`` uses ``fold_in(fold_in(key, REPROGRAM), e)`` with epoch 0
+being the original programming key, so a freshly-built manager's pack is
+bit-identical to ``program_lm`` + ``calibrate_lm`` with the same key,
+and reprogramming a band at epoch 0 reproduces the fresh program of that
+band bit-for-bit (pinned by ``tests/test_drift.py``).
+
+Physics of the composition (per band ``b`` programmed at age ``t_p``):
+
+* programming noise: re-drawn per epoch (a reprogram is a new write);
+* drift: relative age — ``g * (t / t_p)^-nu_cell`` — reprogramming
+  resets the decay clock, which is what makes healing work;
+* faults: absolute age, keyed independently of epochs — a stuck cell
+  stays stuck across reprogramming (a broken device cannot be healed,
+  only recalibrated around).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.core.analog import AnalogSpec, AnalogWeights, program_from_codes
+from repro.hw.profile import Profile, as_profile
+from repro.models.transformer import AnalogPack
+from repro.serve.analog_engine import (
+    HEAD,
+    age_pack,
+    analog_eval_metrics,
+    calibrate_lm,
+    hook_key,
+    lm_program_codes,
+    program_lm_from_codes,
+)
+
+#: fold tag separating reprogram-epoch keys from the original programming
+#: key (epoch 0 *is* the original key — see :meth:`PackManager.epoch_key`)
+_REPROGRAM_FOLD = 0x72657067  # "repg"
+
+#: fold tag deriving the default aging key from the programming key
+_AGE_KEY_FOLD = 0x64726674  # "drft"
+
+#: the head's slot in a heal queue (bands are integer indices)
+HEAD_BAND = "head"
+
+
+@dataclasses.dataclass(frozen=True)
+class DriftClock:
+    """Decode-step counter -> device age ``t`` (t0 units, 1.0 = fresh).
+
+    ``update_every`` is the no-heal aging cadence: a runtime with a clock
+    but no :class:`HealPolicy` still refreshes its served pack every this
+    many decode steps (the degradation baseline ``benchmarks/driftbench``
+    measures healing against).
+    """
+
+    dt_per_step: float = 0.0
+    update_every: int = 16
+
+    def __post_init__(self):
+        if self.dt_per_step < 0:
+            raise ValueError(
+                f"DriftClock.dt_per_step must be >= 0, got {self.dt_per_step}")
+        if self.update_every < 1:
+            raise ValueError(
+                f"DriftClock.update_every must be >= 1, got "
+                f"{self.update_every}")
+
+    def at(self, step: int) -> float:
+        return 1.0 + self.dt_per_step * step
+
+
+@dataclasses.dataclass(frozen=True)
+class HealPolicy:
+    """Step-budgeted self-healing response of a :class:`ServeRuntime`.
+
+    Every ``check_every`` decode steps the runtime re-ages its pack and
+    measures the calibration-probe loss; when it exceeds
+    ``ref * loss_mult + loss_add`` (the ``tests/test_system.py``
+    tolerance formula against the fresh-pack reference) a heal event
+    fires: every aging band is queued for background reprogramming,
+    drained ``bands_per_step`` bands per scheduler step *between* decode
+    steps — in-flight requests keep serving throughout — followed by one
+    recalibration once the queue is empty.  The reprogram path runs
+    through ``repro.runtime.fault.resilient_step`` with ``max_retries``/
+    ``backoff_s``.  ``loss_mult=0, loss_add=-1`` forces a heal on every
+    probe (used by tests).
+    """
+
+    check_every: int = 16
+    loss_mult: float = 1.35
+    loss_add: float = 0.2
+    recalibrate: bool = True
+    reprogram: bool = True
+    bands_per_step: int = 1
+    max_retries: int = 3
+    backoff_s: float = 0.01
+
+    def __post_init__(self):
+        if self.check_every < 1:
+            raise ValueError(
+                f"HealPolicy.check_every must be >= 1, got {self.check_every}")
+        if self.bands_per_step < 1:
+            raise ValueError(
+                f"HealPolicy.bands_per_step must be >= 1, got "
+                f"{self.bands_per_step}")
+
+
+class PackManager:
+    """Owns one served pack's device state over its lifetime.
+
+    Built like ``program_lm`` + ``calibrate_lm`` (and bit-identical to
+    them at construction); then :meth:`aged` derives the pack at any
+    absolute age ``t``, :meth:`reprogram_band` rewrites one band's
+    conductances from the cached codes under a new epoch key (resetting
+    that band's drift clock), and :meth:`recalibrate` re-fits ADC ranges
+    and activation clips to the current device state.
+    """
+
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params: dict,
+        spec: Union[AnalogSpec, Profile],
+        key: jax.Array,
+        *,
+        calib_tokens: jax.Array,
+        include_head: bool = True,
+        age_key: Optional[jax.Array] = None,
+    ):
+        profile = as_profile(spec)
+        for selector, sp in profile.selectors():
+            if float(sp.drift.t) != 1.0 or float(sp.fault.t) != 1.0:
+                raise ValueError(
+                    f"PackManager owns the aging clock: spec of selector "
+                    f"{selector!r} must be at the fresh age (drift.t == "
+                    f"fault.t == 1.0), got drift.t={sp.drift.t} "
+                    f"fault.t={sp.fault.t}")
+        self.cfg, self.params, self.profile = cfg, params, profile
+        self.key = key
+        self.age_key = (jax.random.fold_in(key, _AGE_KEY_FOLD)
+                        if age_key is None else age_key)
+        self.calib_tokens = calib_tokens
+        self.codes = lm_program_codes(cfg, params, profile,
+                                      include_head=include_head)
+        pack = program_lm_from_codes(cfg, self.codes, profile, key)
+        pack = calibrate_lm(cfg, params, pack, calib_tokens)
+        self._fresh = pack
+        self._base = pack                      # current-epoch conductances
+        n_bands = len(pack.bands)
+        self._epoch: List[int] = [0] * n_bands
+        self._t_prog: List[float] = [1.0] * n_bands
+        self._head_epoch, self._head_t = 0, 1.0
+        self._probe_fn = jax.jit(
+            lambda p, x, y: analog_eval_metrics(cfg, params, p, x, y)["loss"])
+        self.ref_loss = float(self.probe_loss(pack))
+
+    # -- health -----------------------------------------------------------
+
+    def probe_loss(self, pack: AnalogPack) -> float:
+        """Teacher-forced loss on the calibration batch — the health
+        probe.  Jitted with the pack as a traced argument, so swapped
+        (healed/aged) packs never recompile."""
+        x = self.calib_tokens[:, :-1]
+        y = self.calib_tokens[:, 1:]
+        return float(self._probe_fn(pack, x, y))
+
+    @property
+    def fresh_pack(self) -> AnalogPack:
+        """The as-built pack (epoch-0 conductances, fresh calibration)."""
+        return self._fresh
+
+    @property
+    def band_epochs(self) -> List[int]:
+        return list(self._epoch)
+
+    # -- aging ------------------------------------------------------------
+
+    def aged(self, t: float) -> AnalogPack:
+        """The served pack at absolute age ``t``: drift relative to each
+        band's reprogram age, faults at absolute ``t`` on the current
+        epoch's conductances."""
+        bands = self._base.bands
+        td = [max(float(t) / tp, 1.0) for tp in self._t_prog]
+        tf = [float(t)] * len(bands)
+        pack = age_pack(self._base, t, self.age_key,
+                        t_drift_by_band=td, t_fault_by_band=tf)
+        return self._age_head(pack, t)
+
+    def _age_head(self, pack: AnalogPack, t: float) -> AnalogPack:
+        # age_pack applied the uniform t to the head; redo it relative to
+        # the head's own reprogram age when they differ
+        if (pack.head is None or not pack.head_spec.aging_on
+                or self._head_t == 1.0):
+            return pack
+        from repro.serve.analog_engine import _age_weights
+
+        t_rel = max(float(t) / self._head_t, 1.0)
+        head = _age_weights(self._base.head, pack.head_spec, t_rel, t,
+                            hook_key(self.age_key, HEAD))
+        return dataclasses.replace(pack, head=head)
+
+    # -- reprogramming ----------------------------------------------------
+
+    def epoch_key(self, epoch: int) -> jax.Array:
+        """Programming key of reprogram generation ``epoch`` (0 = the
+        original build key, exactly)."""
+        if epoch == 0:
+            return self.key
+        return jax.random.fold_in(
+            jax.random.fold_in(self.key, _REPROGRAM_FOLD), epoch)
+
+    def program_band(self, b: int, key: jax.Array) -> Dict[str, AnalogWeights]:
+        """Freshly program band ``b``'s layers for every analog site —
+        bit-identical to the same rows of a full ``program_lm_from_codes``
+        with ``key`` (same ``fold_in(hook_key(key, name), absolute
+        layer)`` schedule)."""
+        lo, hi = self._base.bands[b]
+        out: Dict[str, AnalogWeights] = {}
+        for name in self._base.layer_weights:
+            sp = self._base.band_specs[b].get(name)
+            spec_b = sp if sp is not None else self._base.site_spec(name)
+            sub = jax.tree.map(lambda a: a[lo:hi], self.codes[name])
+            site_key = hook_key(key, name)
+            keys = jax.vmap(lambda i: jax.random.fold_in(site_key, i))(
+                jnp.arange(lo, hi))
+            out[name] = jax.vmap(
+                lambda c, k, s=spec_b: program_from_codes(c, s, k))(sub, keys)
+        return out
+
+    def reprogram_band(self, b: int, *, t_now: float) -> None:
+        """Rewrite band ``b`` under the next epoch key and reset its
+        drift clock to ``t_now``.  Mutates the manager; callers wanting
+        retry/backoff wrap this in ``repro.runtime.fault.resilient_step``
+        (the runtime does)."""
+        e = self._epoch[b] + 1
+        weights = self.program_band(b, self.epoch_key(e))
+        lo, hi = self._base.bands[b]
+        lw = {
+            name: jax.tree.map(
+                lambda full, part: full.at[lo:hi].set(part), aw, weights[name])
+            for name, aw in self._base.layer_weights.items()
+        }
+        self._base = dataclasses.replace(self._base, layer_weights=lw)
+        self._epoch[b] = e
+        self._t_prog[b] = float(t_now)
+
+    def reprogram_head(self, *, t_now: float) -> None:
+        """Rewrite the head projection under its next epoch key."""
+        if self._base.head is None:
+            raise ValueError("this pack has no analog head to reprogram")
+        e = self._head_epoch + 1
+        head = program_from_codes(
+            self.codes[HEAD], self._base.head_spec,
+            hook_key(self.epoch_key(e), HEAD))
+        self._base = dataclasses.replace(self._base, head=head)
+        self._head_epoch = e
+        self._head_t = float(t_now)
+
+    def heal_targets(self) -> List[Any]:
+        """The reprogram queue of one heal event: every band with at
+        least one aging site, then the head if it ages."""
+        targets: List[Any] = []
+        for b, ss in enumerate(self._base.band_specs):
+            if any(sp.aging_on for _, sp in ss.items):
+                targets.append(b)
+        if (self._base.head is not None
+                and self._base.head_spec.aging_on):
+            targets.append(HEAD_BAND)
+        return targets
+
+    # -- recalibration ----------------------------------------------------
+
+    def recalibrate(self, pack: AnalogPack) -> AnalogPack:
+        """Re-fit activation clips and ADC ranges to the aged device
+        state (per-site, through the same two collect passes as the
+        original calibration)."""
+        return calibrate_lm(self.cfg, self.params, pack, self.calib_tokens)

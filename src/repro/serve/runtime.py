@@ -62,6 +62,8 @@ from repro.config import ModelConfig
 from repro.models.layers import NEG_INF
 from repro.models.registry import get_model
 from repro.models.transformer import AnalogPack
+from repro.runtime.fault import resilient_step
+from repro.serve.health import HEAD_BAND
 
 
 # ---------------------------------------------------------------------------
@@ -200,6 +202,18 @@ class ServeRuntime:
                ``len(buckets) * log2(max_slots)`` programs.
     sampler:   :class:`SamplerConfig`; per-slot keys fold from the root
                seed via :func:`request_key`.
+    manager:   a :class:`repro.serve.health.PackManager` owning the pack's
+               device state over time — mutually exclusive with ``pack``.
+               With a ``clock``, the served pack ages (drift + stuck-cell
+               faults) as decode steps accumulate; with a ``heal`` policy,
+               the runtime probes its own health and heals itself: per-site
+               recalibration plus background band-by-band reprogramming,
+               new conductances swapped in *between* decode steps (the
+               jitted step takes the pack as a traced argument, so swaps
+               never recompile and in-flight requests keep serving).
+    clock:     :class:`repro.serve.health.DriftClock` mapping decode steps
+               to device age; requires ``manager``.
+    heal:      :class:`repro.serve.health.HealPolicy`; requires ``manager``.
     eos_id:    stop token (emitted, then the slot retires); ``None``
                disables EOS stopping (pure ``max_new_tokens`` budget).
     gang:      static-batching mode (admit only into an all-free server,
@@ -227,8 +241,22 @@ class ServeRuntime:
         seed: int = 0,
         gang: bool = False,
         measure_ttft: bool = False,
+        manager=None,
+        clock=None,
+        heal=None,
     ):
         api = get_model(cfg)
+        if manager is not None and pack is not None:
+            raise ValueError(
+                "pass either pack= (a static AnalogPack) or manager= (a "
+                "PackManager owning the pack's device state), not both")
+        if (clock is not None or heal is not None) and manager is None:
+            raise ValueError(
+                "clock=/heal= need a manager= (repro.serve.health."
+                "PackManager) to derive aged packs and reprogram bands")
+        self._manager, self._clock, self._heal = manager, clock, heal
+        if manager is not None:
+            pack = manager.aged(clock.at(0) if clock is not None else 1.0)
         if api.prefill_ragged is None or api.cache_slot_insert is None:
             from repro.models.registry import families_with
 
@@ -296,8 +324,12 @@ class ServeRuntime:
         self._queue: Deque[_Pending] = deque()
         self._slots: List[Optional[_Pending]] = [None] * b
         self._live_uids: set = set()
+        self._heal_queue: Deque[Any] = deque()
+        self._last_health = 0
         self._stats = {"decode_steps": 0, "prefill_calls": 0,
-                       "occupancy_sum": 0, "tokens_out": 0, "ttft_s": []}
+                       "occupancy_sum": 0, "tokens_out": 0, "ttft_s": [],
+                       "heal_events": 0, "bands_reprogrammed": 0,
+                       "recalibrations": 0, "probe_losses": []}
 
     @property
     def stats(self) -> Dict[str, Any]:
@@ -307,6 +339,7 @@ class ServeRuntime:
         per-request ``ttft_s`` list."""
         s = dict(self._stats)
         s["ttft_s"] = list(s["ttft_s"])      # snapshot, not the live list
+        s["probe_losses"] = list(s["probe_losses"])
         steps = max(s["decode_steps"], 1)
         s["occupancy"] = s.pop("occupancy_sum") / (steps * self.max_slots)
         return s
@@ -357,12 +390,15 @@ class ServeRuntime:
         while not self.idle:
             for c in self.step():
                 done[c.uid] = c.tokens
+        while self._heal_queue:      # finish healing that started late
+            self._maintain()
         return done
 
     # -- scheduler ---------------------------------------------------------
 
     def step(self) -> List[Completion]:
-        """One scheduler iteration: admit -> decode -> collect."""
+        """One scheduler iteration: maintain -> admit -> decode -> collect."""
+        self._maintain()
         self._admit()
         # lanes past their budget (done_step <= t: retired at prefill, or
         # certainly finished) need collecting, not decoding — don't burn a
@@ -372,10 +408,63 @@ class ServeRuntime:
         t = self._stats["decode_steps"]
         live = sum(p is not None and p.done_step > t for p in self._slots)
         if live:
-            self._state = self._decode_fn(self._state)
+            self._state = self._decode_fn(self._state, self.pack)
             self._stats["decode_steps"] += 1
             self._stats["occupancy_sum"] += live
         return self._collect()
+
+    def _maintain(self) -> None:
+        """Device-state upkeep between decode steps (no-op without a
+        manager).  Drains the heal queue ``bands_per_step`` targets per
+        call through ``resilient_step`` (retry/backoff on transient
+        faults), recalibrating once the queue empties; otherwise every
+        ``check_every`` steps it re-ages the served pack and probes
+        health, queueing a heal when the probe loss exceeds the policy
+        threshold.  In-flight requests are untouched: the pack is a
+        traced argument of the jitted step, so the swap never recompiles
+        and never moves slot state."""
+        m = self._manager
+        if m is None:
+            return
+        hp = self._heal
+        steps = self._stats["decode_steps"]
+        t = self._clock.at(steps) if self._clock is not None else 1.0
+        if self._heal_queue:
+            for _ in range(min(hp.bands_per_step, len(self._heal_queue))):
+                target = self._heal_queue.popleft()
+                if target == HEAD_BAND:
+                    resilient_step(m.reprogram_head, t_now=t,
+                                   max_retries=hp.max_retries,
+                                   backoff_s=hp.backoff_s)
+                else:
+                    resilient_step(m.reprogram_band, target, t_now=t,
+                                   max_retries=hp.max_retries,
+                                   backoff_s=hp.backoff_s)
+                self._stats["bands_reprogrammed"] += 1
+            self.pack = m.aged(t)
+            if not self._heal_queue and hp.recalibrate:
+                self.pack = m.recalibrate(self.pack)
+                self._stats["recalibrations"] += 1
+            return
+        every = (hp.check_every if hp is not None
+                 else (self._clock.update_every
+                       if self._clock is not None else 0))
+        if not every or (steps - self._last_health) < every:
+            return
+        self._last_health = steps
+        if self._clock is not None:
+            self.pack = m.aged(t)
+        if hp is None:
+            return
+        loss = m.probe_loss(self.pack)
+        self._stats["probe_losses"].append(loss)
+        if loss > m.ref_loss * hp.loss_mult + hp.loss_add:
+            self._stats["heal_events"] += 1
+            if hp.reprogram:
+                self._heal_queue.extend(m.heal_targets())
+            elif hp.recalibrate:
+                self.pack = m.recalibrate(self.pack)
+                self._stats["recalibrations"] += 1
 
     def _admit(self) -> None:
         free = [i for i, p in enumerate(self._slots) if p is None]
@@ -422,7 +511,7 @@ class ServeRuntime:
         if fn is None:
             fn = self._prefill_fns[(bucket, g)] = jax.jit(
                 self._make_prefill_fn())
-        self._state = fn(self._state, jnp.asarray(prompts),
+        self._state = fn(self._state, self.pack, jnp.asarray(prompts),
                          jnp.asarray(true_lens), jnp.asarray(slots),
                          jnp.asarray(max_new), jnp.stack(keys))
         self._stats["prefill_calls"] += 1
@@ -469,10 +558,13 @@ class ServeRuntime:
     # -- jitted step bodies ------------------------------------------------
 
     def _make_decode_fn(self):
-        cfg, params, pack = self.cfg, self.params, self.pack
+        cfg, params = self.cfg, self.params
         api, sampler, eos = self._api, self.sampler, self._eos
 
-        def decode(state: SlotState) -> SlotState:
+        # the pack is a traced ARGUMENT, not a closure: a healed/aged pack
+        # (same treedef, new conductances) swaps in between decode steps
+        # without recompiling the step
+        def decode(state: SlotState, pack) -> SlotState:
             cache = {"layers": state.layers, "len": state.length}
             logits, cache = api.decode_step(
                 cfg, params, state.tok[:, None], cache, pack=pack)
@@ -498,11 +590,11 @@ class ServeRuntime:
         return decode
 
     def _make_prefill_fn(self):
-        cfg, params, pack = self.cfg, self.params, self.pack
+        cfg, params = self.cfg, self.params
         api, sampler, eos = self._api, self.sampler, self._eos
 
-        def prefill(state: SlotState, prompts, true_lens, slots, max_new,
-                    keys) -> SlotState:
+        def prefill(state: SlotState, pack, prompts, true_lens, slots,
+                    max_new, keys) -> SlotState:
             logits, pcache = api.prefill_ragged(
                 cfg, params, prompts, true_lens=true_lens, pack=pack)
             first, keys = sample_tokens(logits[:, -1], keys, sampler)

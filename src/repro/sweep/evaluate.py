@@ -149,6 +149,11 @@ def dynamic_fields_for(spec) -> Dict[str, float]:
     * ``r_hat`` — only while parasitics are *on*; the on/off bit is a
       static program property (``AnalogSpec.parasitics_on``), which is
       what collapses a Fig. 19 axis into one compile group.
+    * ``drift.nu`` / ``drift.t`` — only under power-law drift, and
+      ``fault.rate`` / ``fault.t`` — only with stuck faults: like
+      parasitics, kind is static (``AnalogSpec.aging_on``) while the
+      horizon and magnitude trace, so a ``benchmarks/driftbench`` grid
+      over ``drift.t`` compiles once.
 
     ``spec`` may also be a :class:`repro.hw.Profile`: each analog rule's
     dynamic fields are prefixed with its selector
@@ -174,6 +179,12 @@ def dynamic_fields_for(spec) -> Dict[str, float]:
         dyn["mapping.on_off_ratio"] = float(spec.mapping.on_off_ratio)
     if spec.parasitics_on:
         dyn["r_hat"] = float(spec.r_hat)
+    if spec.drift.kind == "power_law":
+        dyn["drift.nu"] = float(spec.drift.nu)
+        dyn["drift.t"] = float(spec.drift.t)
+    if spec.fault.kind == "stuck":
+        dyn["fault.rate"] = float(spec.fault.rate)
+        dyn["fault.t"] = float(spec.fault.t)
     return dyn
 
 

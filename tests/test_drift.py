@@ -1,0 +1,173 @@
+"""Drift + fault + healing determinism pins (tier-1, no training).
+
+The aging contract (DESIGN.md §Drift-and-healing):
+
+* a ``PackManager``'s fresh pack is bit-identical to ``program_lm`` +
+  ``calibrate_lm`` under the same key — owning device state costs
+  nothing when aging is off;
+* ``aged(t=1)`` / ``AnalogPack.age(1, key)`` are bitwise no-ops even
+  with drift and fault models *enabled* (the fresh-age anchor that keeps
+  every pre-drift golden valid);
+* aging replays: same key + same age = bit-identical conductances;
+* reprogramming band ``b`` at epoch 0 reproduces the fresh program of
+  exactly that band (the splice is surgical), and a reprogram at age
+  ``t`` resets that band's drift clock (relative age 1 ⇒ no decay);
+* stuck cells are *permanent*: fault masks key off the age key, not the
+  reprogram epoch, so a reprogrammed band carries the same broken cells;
+* the served answer is unchanged by the whole machinery: runtime-vs-
+  ``decode_lm`` greedy agreement is exactly 1.0 on an aged-then-healed
+  pack (the ISSUE acceptance bar).
+"""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import analog as A
+from repro.core import errors as E
+from repro.data.synthetic import SyntheticLM
+from repro.models.registry import get_model
+from repro.serve import PackManager, calibrate_lm, program_lm
+from repro.sweep.serve_eval import runtime_agreement
+
+KEY = jax.random.PRNGKey(5)
+
+#: drift + faults enabled — every site of the pack ages
+AGING_SPEC = A.design_a(
+    error=E.state_independent(0.05),
+    drift=E.power_law_drift(0.2, sigma_nu=0.3),
+    fault=E.stuck_faults(1e-3),
+)
+
+
+@pytest.fixture(scope="module")
+def lm():
+    cfg = get_smoke_config("qwen1.5-4b")
+    params = get_model(cfg).init_params(cfg, jax.random.PRNGKey(0))
+    calib = SyntheticLM(cfg=cfg, seq_len=16, global_batch=4,
+                        seed=0).batch(1)["tokens"]
+    return cfg, params, calib
+
+
+@pytest.fixture(scope="module")
+def manager(lm):
+    cfg, params, calib = lm
+    return PackManager(cfg, params, AGING_SPEC, KEY, calib_tokens=calib)
+
+
+def _leaves_equal(a, b) -> bool:
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    return all((np.asarray(x) == np.asarray(y)).all() for x, y in zip(la, lb))
+
+
+def test_manager_fresh_pack_matches_program_calibrate(lm, manager):
+    """Owning device state is free: the manager's as-built pack is
+    bit-identical to the plain program + calibrate path."""
+    cfg, params, calib = lm
+    ref = calibrate_lm(cfg, params,
+                       program_lm(cfg, params, AGING_SPEC, KEY), calib)
+    assert _leaves_equal(manager.fresh_pack, ref)
+
+
+def test_aged_at_t0_is_bitwise_noop(manager):
+    """t = 1 is the fresh-age anchor: decay factor exactly 1.0, stuck
+    probability exactly 0 — enabled models change nothing at t0."""
+    assert _leaves_equal(manager.aged(1.0), manager.fresh_pack)
+
+
+def test_aging_replays_and_responds_to_key(manager):
+    a1, a2 = manager.aged(64.0), manager.aged(64.0)
+    assert _leaves_equal(a1, a2)
+    assert not _leaves_equal(a1, manager.fresh_pack)
+
+
+def test_pack_age_method_deterministic(manager):
+    """``AnalogPack.age``: replayable per key, no-op at t=1, and keyed —
+    a different key draws different per-cell exponents."""
+    pack = manager.fresh_pack
+    k1, k2 = jax.random.PRNGKey(1), jax.random.PRNGKey(2)
+    assert _leaves_equal(pack.age(64.0, k1), pack.age(64.0, k1))
+    assert _leaves_equal(pack.age(1.0, k1), pack)
+    assert not _leaves_equal(pack.age(64.0, k1), pack.age(64.0, k2))
+
+
+def test_band_reprogram_bit_identity_vs_fresh_program(manager):
+    """Reprogramming a band under the epoch-0 key reproduces the fresh
+    program of exactly those rows — the splice path and the full
+    ``program_lm_from_codes`` path share one key schedule."""
+    fresh = manager.fresh_pack
+    for b in range(len(fresh.bands)):
+        lo, hi = fresh.bands[b]
+        weights = manager.program_band(b, manager.epoch_key(0))
+        for name, aw in weights.items():
+            ref = jax.tree.map(lambda a: a[lo:hi], fresh.layer_weights[name])
+            assert _leaves_equal(aw, ref), (b, name)
+
+
+def test_reprogram_resets_drift_clock(lm):
+    """With deterministic programming (error none, faults off), a band
+    reprogrammed at age t serves *bit-identical to fresh* at age t:
+    relative drift age is exactly 1 again."""
+    cfg, params, calib = lm
+    spec = A.design_a(error=E.none(),
+                      drift=E.power_law_drift(0.2, sigma_nu=0.3))
+    m = PackManager(cfg, params, spec, KEY, calib_tokens=calib)
+    t = 64.0
+    assert not _leaves_equal(m.aged(t), m.fresh_pack)   # drift bites...
+    for target in m.heal_targets():
+        if target == "head":
+            m.reprogram_head(t_now=t)
+        else:
+            m.reprogram_band(target, t_now=t)
+    assert _leaves_equal(m.aged(t), m.fresh_pack)       # ...and heals
+    assert not _leaves_equal(m.aged(4 * t), m.fresh_pack)  # then re-drifts
+
+
+def test_faults_survive_reprogramming(lm):
+    """Stuck cells key off the age key, not the reprogram epoch: the
+    same cells are broken, with the same polarity, after a rewrite."""
+    cfg, params, calib = lm
+    spec = A.design_a(error=E.none(), fault=E.stuck_faults(1e-2))
+    m = PackManager(cfg, params, spec, KEY, calib_tokens=calib)
+    t = 64.0
+    before = m.aged(t)
+    assert not _leaves_equal(before, m.fresh_pack)      # faults present
+    for target in m.heal_targets():
+        if target == "head":
+            m.reprogram_head(t_now=t)
+        else:
+            m.reprogram_band(target, t_now=t)
+    assert _leaves_equal(m.aged(t), before)
+
+
+def test_manager_rejects_pre_aged_specs(lm):
+    cfg, params, calib = lm
+    spec = dataclasses.replace(
+        AGING_SPEC, drift=dataclasses.replace(AGING_SPEC.drift, t=64.0))
+    with pytest.raises(ValueError, match="fresh age"):
+        PackManager(cfg, params, spec, KEY, calib_tokens=calib)
+
+
+def test_runtime_agreement_on_aged_then_healed_pack(lm):
+    """Acceptance bar: the continuous-batching runtime and per-request
+    ``decode_lm`` agree token-for-token (exactly 1.0) on a pack that
+    aged, was band-by-band reprogrammed mid-life, aged again, and was
+    recalibrated — scheduling never changes what the model says, even
+    through spliced band stacks."""
+    cfg, params, calib = lm
+    m = PackManager(cfg, params, AGING_SPEC, KEY, calib_tokens=calib)
+    for target in m.heal_targets():
+        if target == "head":
+            m.reprogram_head(t_now=16.0)
+        else:
+            m.reprogram_band(target, t_now=16.0)
+    healed = m.recalibrate(m.aged(64.0))
+    rng = np.random.default_rng(0)
+    reqs = [(rng.integers(0, cfg.vocab, size=int(rng.integers(4, 6)))
+             .astype(np.int32), int(rng.integers(4, 6))) for _ in range(5)]
+    assert runtime_agreement(cfg, params, reqs, pack=healed,
+                             max_slots=2, max_len=24) == 1.0

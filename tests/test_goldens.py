@@ -2,12 +2,13 @@
 checked-in JSON, asserted bit-stable across refactors.
 
 The sweeps are the benchmark grids of ``fig8_9_cell_errors``,
-``fig15_16_adc``, ``fig19_parasitics``, and ``hetero_precision`` reduced
-to the smoke protocol (one programming trial per point), evaluated fresh
-(no on-disk cache) on the trained MLP vehicle (``benchmarks/common``) —
-the ``hetero`` grid runs on the committed trained smoke LM
-(``benchmarks/_cache/lm_qwen1_5-4b_0.npz``) through the heterogeneous
-profile serve path.  Every floating-point accuracy must
+``fig15_16_adc``, ``fig19_parasitics``, ``hetero_precision``, and
+``driftbench`` reduced to the smoke protocol (one programming trial per
+point), evaluated fresh (no on-disk cache) on the trained MLP vehicle
+(``benchmarks/common``) — the ``hetero`` and ``drift`` grids run on the
+committed trained smoke LM (``benchmarks/_cache/lm_qwen1_5-4b_0.npz``),
+``hetero`` through the heterogeneous profile serve path and ``drift``
+through the traced drift-horizon × nu aging path.  Every floating-point accuracy must
 match the golden file *exactly*: the engine is deterministic given
 (weights, seeds, platform, jax version), so any drift is a behaviour
 change — either a bug, or an intentional numerics change that must be
@@ -59,6 +60,7 @@ def _lm_evaluator():
 def _smoke_sweeps():
     """(name, (SweepSpec, evaluator factory)) per golden grid, at one
     trial per point."""
+    from benchmarks.driftbench import drift_sweep
     from benchmarks.fig8_9_cell_errors import (
         ALPHAS_IND, ALPHAS_PROP, fig_sweep)
     from benchmarks.fig15_16_adc import fig15_sweep, fig16_sweep
@@ -78,6 +80,11 @@ def _smoke_sweeps():
         # pins the profile resolver -> per-site program -> calibrate ->
         # serve -> decode chain bit-stable (tag "hetero")
         (dataclasses.replace(hetero_sweep(smoke=True), name="hetero"),
+         _lm_evaluator),
+        # drift horizon x nu grid on the committed trained LM: pins the
+        # traced drift/fault aging path bit-stable, with the t=1 point
+        # doubling as the fresh-age bit-identity anchor (tag "drift")
+        (dataclasses.replace(drift_sweep(smoke=True), name="drift"),
          _lm_evaluator),
     ]
     return [
@@ -101,7 +108,7 @@ def _jax_minor(version):
 
 
 @pytest.mark.parametrize("name", ["fig8", "fig9", "fig15", "fig16",
-                                  "fig19", "hetero"])
+                                  "fig19", "hetero", "drift"])
 def test_smoke_grid_matches_golden(name):
     path = _golden_path(name)
     assert os.path.exists(path), (

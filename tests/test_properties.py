@@ -241,6 +241,87 @@ def test_any_valid_spec_full_pipeline_well_formed(spec):
     assert bool(jnp.all(jnp.isfinite(y)))
 
 
+# ---------------------------------------------------------------------------
+# drift + fault models (DESIGN.md §Drift-and-healing)
+# ---------------------------------------------------------------------------
+
+from repro.core.errors import DriftModel, FaultModel
+
+
+@st.composite
+def drift_models(draw):
+    """Valid power-law drift models: nu ∈ [0, 0.5], lognormal per-cell
+    spread sigma_nu ∈ [0, 1]."""
+    return DriftModel(kind="power_law",
+                      nu=draw(st.floats(0.0, 0.5)),
+                      sigma_nu=draw(st.floats(0.0, 1.0)))
+
+
+@st.composite
+def fault_models(draw):
+    """Valid stuck-cell models: arrival rate ∈ [0, 0.1] per t0 of age,
+    any G_max/G_min polarity split."""
+    return FaultModel(kind="stuck",
+                      rate=draw(st.floats(0.0, 0.1)),
+                      p_hi=draw(st.floats(0.0, 1.0)))
+
+
+_G = jax.random.uniform(jax.random.PRNGKey(12), (32, 8),
+                        minval=1e-4, maxval=1.0)
+
+
+@given(drift=drift_models(), fault=fault_models(), seed=st.integers(0, 100))
+@settings(**SETTINGS)
+def test_aging_at_t0_is_bitwise_identity(drift, fault, seed):
+    """t = 1 is the fresh-age anchor for *every* valid model: decay
+    factor exactly ``1.0 ** -nu_cell == 1.0`` and stuck probability
+    exactly 0 — aging enabled must be a bit-identical no-op."""
+    key = jax.random.PRNGKey(seed)
+    np.testing.assert_array_equal(np.asarray(drift.apply(_G, 1.0, key)),
+                                  np.asarray(_G))
+    np.testing.assert_array_equal(np.asarray(fault.apply(_G, 1.0, key)),
+                                  np.asarray(_G))
+
+
+@given(drift=drift_models(), seed=st.integers(0, 100),
+       t1=st.floats(1.0, 100.0), t2=st.floats(1.0, 100.0))
+@settings(**SETTINGS)
+def test_drift_monotone_decay(drift, seed, t1, t2):
+    """Retention decay only shrinks conductance, elementwise monotone in
+    age: 0 < g(t2) <= g(t1) <= g0 for t2 >= t1 (per cell — the exponents
+    are a fixed device property of the key)."""
+    key = jax.random.PRNGKey(seed)
+    lo, hi = sorted((t1, t2))
+    g1, g2 = np.asarray(drift.apply(_G, lo, key)), np.asarray(
+        drift.apply(_G, hi, key))
+    assert (g1 <= np.asarray(_G) + 1e-7).all()
+    assert (g2 <= g1 + 1e-7).all()
+    assert (g2 > 0).all()
+
+
+@given(fault=fault_models(), seed=st.integers(0, 100),
+       t1=st.floats(1.0, 100.0), t2=st.floats(1.0, 100.0))
+@settings(**SETTINGS)
+def test_fault_masks_replayable_nested_idempotent(fault, seed, t1, t2):
+    """Fault masks under one key: re-aging replays bit-identically
+    (idempotent), and arrivals are monotone — the stuck set at t1 is a
+    subset of the stuck set at t2 >= t1, with per-cell values fixed
+    (a cell's G_min/G_max polarity never flips)."""
+    key = jax.random.PRNGKey(seed)
+    lo, hi = sorted((t1, t2))
+    a1 = np.asarray(fault.apply(_G, lo, key))
+    np.testing.assert_array_equal(a1, np.asarray(fault.apply(_G, lo, key)))
+    a2 = np.asarray(fault.apply(_G, hi, key))
+    stuck1 = a1 != np.asarray(_G)
+    stuck2 = a2 != np.asarray(_G)
+    assert (stuck2 | ~stuck1).all(), "stuck sets must be nested in t"
+    np.testing.assert_array_equal(a2[stuck1], a1[stuck1])
+    # re-applying the mask to already-faulted conductances changes
+    # nothing: stuck cells are pinned at exactly g_lo/g_hi
+    np.testing.assert_array_equal(np.asarray(fault.apply(
+        jnp.asarray(a1), lo, key)), a1)
+
+
 def test_energy_model_monotonicity():
     from repro.core import energy as en
     from repro.core.adc import ADCConfig

@@ -147,6 +147,98 @@ def test_eos_stops_early(lm):
 
 
 # ---------------------------------------------------------------------------
+# self-healing: mid-stream reprogramming must not touch in-flight requests
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def noop_aging_manager(lm):
+    """PackManager whose aging is *enabled but numerically inert*:
+    ``nu = 0`` makes the drift factor exactly 1.0 while ``aging_on``
+    stays True, so heal events really reprogram bands — and with
+    ``error=none`` programming is deterministic, so every rewrite is
+    bit-identical.  The healed runtime must therefore serve exactly
+    what the unhealed one serves."""
+    from repro.data.synthetic import SyntheticLM
+    from repro.serve import PackManager
+
+    cfg, params = lm
+    calib = SyntheticLM(cfg=cfg, seq_len=16, global_batch=4,
+                        seed=0).batch(1)["tokens"]
+    return lambda: PackManager(
+        cfg, params, A.design_a(error=E.none(),
+                                drift=E.power_law_drift(0.0)),
+        jax.random.PRNGKey(5), calib_tokens=calib)
+
+
+#: forces a heal on every health probe (threshold below any real loss)
+FORCE_HEAL = dict(check_every=1, loss_mult=0.0, loss_add=-1.0)
+
+
+def test_mid_stream_reprogram_preserves_tokens(lm, noop_aging_manager):
+    """Requests admitted before, during, and after heal events complete
+    with tokens identical to an unhealed same-seed run when drift is a
+    no-op: the background reprogram path swaps packs between decode
+    steps without perturbing any in-flight slot."""
+    from repro.serve import HealPolicy
+
+    cfg, params = lm
+    reqs = _trace(cfg, 6, seed=5, lens=(4, 6), new=(4, 8))
+    outs = []
+    for heal in (None, HealPolicy(**FORCE_HEAL, bands_per_step=1)):
+        rt = ServeRuntime(cfg, params, manager=noop_aging_manager(),
+                          max_slots=2, max_len=24, heal=heal)
+        for i, (p, n) in enumerate(reqs):
+            rt.submit(p, max_new_tokens=n, uid=i)
+        outs.append(rt.run())
+        if heal is not None:
+            s = rt.stats
+            assert s["heal_events"] >= 1        # healing really happened
+            assert s["bands_reprogrammed"] >= 2
+            assert s["recalibrations"] >= 1
+    for uid in outs[0]:
+        np.testing.assert_array_equal(outs[0][uid], outs[1][uid])
+
+
+def test_eos_during_reprogram_race(lm, noop_aging_manager):
+    """A request whose EOS fires while the heal queue is mid-drain
+    (``bands_per_step=1`` spreads one heal event over several scheduler
+    steps) must retire exactly at the EOS token, and a request submitted
+    during the drain must serve correctly afterwards."""
+    from repro.serve import HealPolicy, decode_lm
+
+    cfg, params = lm
+    m = noop_aging_manager()
+    prompt = np.arange(5, dtype=np.int32) % cfg.vocab
+    ref = np.asarray(decode_lm(cfg, params, jnp.asarray(prompt)[None], 8,
+                               pack=m.fresh_pack))[0]
+    # stop on a token greedy emits at position >= 3 and nowhere earlier:
+    # the first probe fires after decode step 1 and drains one band per
+    # step after, so retirement at decode step j >= 3 lands mid-drain
+    j = next(i for i in range(3, 8) if ref[i] not in ref[:i])
+    eos = int(ref[j])
+    rt = ServeRuntime(cfg, params, manager=m, max_slots=2, max_len=16,
+                      eos_id=eos, heal=HealPolicy(**FORCE_HEAL,
+                                                  bands_per_step=1))
+    uid = rt.submit(prompt, max_new_tokens=8)
+    # step until the EOS request retires; every step is also draining /
+    # re-queueing heal targets, so the retirement races a reprogram
+    done = {}
+    for _ in range(64):
+        for c in rt.step():
+            done[c.uid] = c.tokens
+        if uid in done:
+            break
+    np.testing.assert_array_equal(done[uid], ref[:j + 1])
+    assert rt.stats["bands_reprogrammed"] >= 1   # reprogram raced the EOS
+    # a late request admitted into the still-healing server serves fine
+    uid2 = rt.submit(prompt, max_new_tokens=2)
+    out2 = rt.run()
+    np.testing.assert_array_equal(out2[uid2], ref[:2])
+    assert not rt._heal_queue            # run() drains leftover healing
+
+
+# ---------------------------------------------------------------------------
 # slot cache insert / evict
 # ---------------------------------------------------------------------------
 

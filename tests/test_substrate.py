@@ -146,7 +146,7 @@ def test_resilient_step_retries_then_succeeds():
     def flaky():
         calls["n"] += 1
         if calls["n"] < 3:
-            raise RuntimeError("transient")
+            raise ConnectionError("transient")
         return "ok"
 
     assert resilient_step(flaky, backoff_s=0.001) == "ok"
@@ -157,10 +157,50 @@ def test_resilient_step_gives_up():
     from repro.runtime.fault import StepFailed, resilient_step
 
     def always_fails():
-        raise RuntimeError("dead node")
+        raise TimeoutError("dead node")
 
     with pytest.raises(StepFailed):
         resilient_step(always_fails, max_retries=2, backoff_s=0.001)
+
+
+def test_resilient_step_deterministic_errors_reraise_immediately():
+    """A bare RuntimeError (XLA shape error, assertion, NaN guard) is
+    NOT transient: one attempt, no retries, original exception type."""
+    from repro.runtime.fault import resilient_step
+
+    calls = {"n": 0}
+
+    def deterministic():
+        calls["n"] += 1
+        raise RuntimeError("rank mismatch: expected 2, got 3")
+
+    with pytest.raises(RuntimeError, match="rank mismatch"):
+        resilient_step(deterministic, max_retries=5, backoff_s=0.001)
+    assert calls["n"] == 1
+
+    def missing():
+        calls["n"] += 1
+        raise FileNotFoundError("no such checkpoint")
+
+    with pytest.raises(FileNotFoundError):
+        resilient_step(missing, max_retries=5, backoff_s=0.001)
+    assert calls["n"] == 2
+
+
+def test_resilient_step_transient_xla_messages():
+    """jaxlib's XlaRuntimeError has no subtype taxonomy — transience is
+    decided by an RPC-status message allowlist (``is_transient``)."""
+    from repro.runtime.fault import is_transient
+
+    class XlaRuntimeError(RuntimeError):     # stand-in, matched by name
+        pass
+
+    assert is_transient(XlaRuntimeError("UNAVAILABLE: socket closed"))
+    assert is_transient(XlaRuntimeError("DEADLINE_EXCEEDED: heartbeat"))
+    assert not is_transient(XlaRuntimeError("INVALID_ARGUMENT: rank"))
+    assert not is_transient(RuntimeError("UNAVAILABLE"))  # name-gated
+    assert is_transient(ConnectionResetError("peer reset"))
+    assert not is_transient(ValueError("bad field"))
 
 
 def test_straggler_monitor_flags_outliers():
