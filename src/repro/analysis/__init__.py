@@ -1,0 +1,63 @@
+"""Static analysis for the analog-inference stack (ISSUE 8).
+
+Two layers:
+
+* **lint** — AST passes over ``src/repro`` for the hazard classes this
+  repo has actually shipped bugs in: SPMD concat-of-slices reassembly,
+  Mosaic-illegal Pallas tile shapes, PRNG key reuse and literal seeds,
+  host syncs reachable from jitted bodies, bare asserts / silent
+  ``except: pass`` in library code.  See ``repro.analysis.rules`` for
+  the catalog.
+* **contracts** — :class:`CompileContract` declarations ("this entry
+  point compiles at most N times across this grid") checked statically
+  against the sweep executor's compile-group partition and, at trace
+  level, against real XLA compilation counts.  The repo's own suite
+  lives in ``repro.analysis.repo_contracts``.
+
+``tools/analyze.py`` is the CLI; ``--ci`` gates on the committed
+baseline (shipped empty — true positives were fixed, not grandfathered).
+"""
+
+from repro.analysis.contracts import (
+    CompileContract,
+    TRACE_SENTINELS,
+    check_contract,
+    check_contracts,
+    compile_counter,
+    jaxpr_scalar_constants,
+    jit_cache_size,
+    traced_constant_violations,
+)
+from repro.analysis.findings import (
+    Baseline,
+    Finding,
+    apply_suppressions,
+    suppressed_rules,
+)
+from repro.analysis.report import (
+    analyze_file,
+    analyze_paths,
+    analyze_source,
+    render,
+    rule_ids,
+)
+
+__all__ = [
+    "Baseline",
+    "CompileContract",
+    "Finding",
+    "TRACE_SENTINELS",
+    "analyze_file",
+    "analyze_paths",
+    "analyze_source",
+    "apply_suppressions",
+    "check_contract",
+    "check_contracts",
+    "compile_counter",
+    "jaxpr_scalar_constants",
+    "jit_cache_size",
+    "render",
+    "rule_ids",
+    "suppressed_rules",
+    "traced_constant_violations",
+]

@@ -1,0 +1,263 @@
+"""This repo's declared compile contracts — the PR 3-6 pins, as data.
+
+Each :class:`~repro.analysis.contracts.CompileContract` here encodes a
+compilation-structure guarantee the paper reproduction leans on (see
+docs/PAPER_MAP.md §compile contracts for the accuracy invariant each
+one protects):
+
+* the Fig. 7/8 error axes and the Fig. 19 parasitic axis batch as
+  traced scalars — one compiled program per axis, not per value;
+* ``r_hat == 0`` keeps its own (solve-free) program: traced-to-zero
+  would both slow the clean baseline and perturb its numerics;
+* non-varying dynamic fields stay concrete Python floats (the
+  bit-exactness rule: traced scalars round ``1 - 1/on_off`` in float32,
+  concrete ones in double);
+* drift's nu x t grid (Fig. 21 horizons) compiles once;
+* ``ServeRuntime``'s decode step compiles once across a ragged trace;
+* values for fields declared traced flow through the traced row, never
+  out of the template (a template value silently reused by every other
+  axis point is the worst failure: wrong numbers, no crash).
+
+``static_contracts()`` run in tier-1 CI (structural, milliseconds);
+``trace_contracts()`` execute real jitted entry points and run in the
+tier-2 nightly (``tools/analyze.py --contracts trace``).
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+from repro.analysis.contracts import (
+    CompileContract,
+    TRACE_SENTINELS,
+    traced_constant_violations,
+)
+
+_vehicle_cache = None
+
+
+def _classifier_vehicle():
+    """The tiny random classifier from tests/test_sweep.py, module-cached."""
+    global _vehicle_cache
+    if _vehicle_cache is None:
+        import jax
+        import jax.numpy as jnp
+
+        # the fixture's pinned seed IS the contract vehicle
+        ks = jax.random.split(
+            jax.random.PRNGKey(0), 6)  # repro: ignore[prng-seed]
+        dims = (16, 32, 8)
+        layers = [
+            (jax.random.normal(ks[i], (dims[i], dims[i + 1]))
+             * dims[i] ** -0.5,
+             jnp.zeros((dims[i + 1],)))
+            for i in range(2)
+        ]
+        xca = jax.random.normal(ks[3], (64, 16))
+        xte = jax.random.normal(ks[4], (128, 16))
+        yte = jax.random.randint(ks[5], (128,), 0, 8)
+        _vehicle_cache = (layers, xca, xte, yte)
+    return _vehicle_cache
+
+
+def _evaluator():
+    from repro.sweep import ClassifierEvaluator
+
+    return ClassifierEvaluator(*_classifier_vehicle())
+
+
+def _sweep(axes, base=None, trials=1):
+    from repro.core.adc import ADCConfig
+    from repro.core.analog import AnalogSpec
+    from repro.sweep import SweepSpec
+
+    return SweepSpec(
+        name="contract",
+        base=base if base is not None
+        else AnalogSpec(adc=ADCConfig(style="none"), max_rows=64),
+        axes=tuple(axes),
+        trials=trials,
+    )
+
+
+def static_contracts() -> List[CompileContract]:
+    from repro.core import errors as E
+    from repro.core.adc import ADCConfig
+    from repro.core.analog import AnalogSpec
+    from repro.sweep import Axis
+
+    return [
+        CompileContract(
+            name="sweep/alpha-axis-one-group",
+            description="Fig. 7/8 error axis batches as one traced group",
+            sweep=_sweep(
+                (Axis("error.alpha", (0.01, 0.02, 0.05, 0.1)),),
+                base=AnalogSpec(adc=ADCConfig(style="none"),
+                                error=E.state_proportional(0.0)),
+                trials=2),
+            evaluator=_evaluator,
+            max_groups=1,
+            require_dynamic=("error.alpha",),
+        ),
+        CompileContract(
+            name="sweep/constant-field-stays-static",
+            description="non-varying dynamic fields stay concrete "
+                        "(bit-exactness vs the serial reference)",
+            sweep=_sweep(
+                (Axis("max_rows", (72, 1152)),),
+                base=AnalogSpec(adc=ADCConfig(style="none"),
+                                error=E.state_proportional(0.05))),
+            evaluator=_evaluator,
+            max_groups=2, min_groups=2,
+            expect_dynamic=((),),
+        ),
+        CompileContract(
+            name="sweep/r-hat-axis-one-group",
+            description="Fig. 19 parasitic axis shares one tridiagonal-"
+                        "solve program across r_hat levels",
+            sweep=_sweep((Axis("r_hat", (1e-5, 1e-4, 1e-3)),)),
+            evaluator=_evaluator,
+            max_groups=1,
+            require_dynamic=("r_hat",),
+        ),
+        CompileContract(
+            name="sweep/r-hat-on-off-split",
+            description="r_hat == 0 keeps its own solve-free program, "
+                        "never traced to zero",
+            sweep=_sweep((Axis("r_hat", (0.0, 1e-4, 1e-3)),)),
+            evaluator=_evaluator,
+            max_groups=2, min_groups=2,
+            expect_dynamic=((), ("r_hat",)),
+            require_dynamic=("r_hat",),
+        ),
+        CompileContract(
+            name="sweep/drift-grid-one-group",
+            description="Fig. 21 nu x t drift grid compiles once "
+                        "(horizon and exponent both traced)",
+            sweep=_sweep(
+                (Axis("drift.nu", (0.1, 0.2)),
+                 Axis("drift.t", (1.0, 16.0, 256.0))),
+                base=AnalogSpec(adc=ADCConfig(style="none"), max_rows=64,
+                                drift=E.power_law_drift(0.2))),
+            evaluator=_evaluator,
+            max_groups=1,
+            expect_dynamic=(("drift.nu", "drift.t"),),
+            require_dynamic=("drift.nu", "drift.t"),
+        ),
+    ]
+
+
+# ---------------------------------------------------------------------------
+# trace level
+# ---------------------------------------------------------------------------
+
+
+def _alpha_grid_contract() -> CompileContract:
+    from repro.core import errors as E
+    from repro.core.adc import ADCConfig
+    from repro.core.analog import AnalogSpec
+    from repro.sweep import Axis, run_sweep
+
+    ev = _evaluator()
+    sweep = _sweep(
+        (Axis("error.alpha", (0.01, 0.02, 0.05, 0.1)),),
+        base=AnalogSpec(adc=ADCConfig(style="none"),
+                        error=E.state_proportional(0.0)),
+        trials=2)
+
+    return CompileContract(
+        name="sweep/alpha-axis-compiles-once",
+        description="running the 4-point error axis leaves exactly one "
+                    "compiled signature in the evaluator's jit cache",
+        run=lambda: run_sweep(sweep, ev),
+        entries=lambda: list(ev._fn_cache.values()),
+        max_compiles=1,
+    )
+
+
+def _decode_once_contract() -> CompileContract:
+    import numpy as np
+
+    state = {}
+
+    def run():
+        import jax
+
+        from repro.configs import get_smoke_config
+        from repro.models.registry import get_model
+        from repro.serve import ServeRuntime
+
+        cfg = get_smoke_config("qwen1.5-4b")
+        params = get_model(cfg).init_params(
+            cfg, jax.random.PRNGKey(0))  # repro: ignore[prng-seed]
+        rt = ServeRuntime(cfg, params, max_slots=3, max_len=32)
+        state["rt"] = rt
+        rng = np.random.default_rng(0)
+        for i in range(9):     # mixed ragged trace: lens 3..14, new 2..8
+            prompt = rng.integers(
+                0, cfg.vocab, size=int(rng.integers(3, 15))).astype(np.int32)
+            rt.submit(prompt, max_new_tokens=int(rng.integers(2, 9)), uid=i)
+        rt.run()
+
+    return CompileContract(
+        name="serve/decode-compiles-once",
+        description="ServeRuntime's decode step compiles once across a "
+                    "mixed ragged trace (ragged-ness lives in data, "
+                    "never in program shape)",
+        run=run,
+        entries=lambda: [state["rt"]._decode_fn],
+        max_compiles=1,
+    )
+
+
+def _traced_fields_contract() -> CompileContract:
+    def run():
+        import jax
+
+        from repro.core import errors as E
+        from repro.core.adc import ADCConfig
+        from repro.core.analog import AnalogSpec
+        from repro.sweep.evaluate import materialize, trial_accuracy
+
+        layers, xca, xte, yte = _classifier_vehicle()
+        # sentinels planted in the TEMPLATE for fields declared traced;
+        # materialize must override them with the traced row — a
+        # sentinel surviving into the jaxpr as a constant means a point
+        # read the template value and every axis point shares it
+        template = AnalogSpec(
+            adc=ADCConfig(style="none"), max_rows=64,
+            error=E.state_proportional(TRACE_SENTINELS[0]),
+            r_hat=TRACE_SENTINELS[1])
+
+        def point(alpha, r_hat, key):
+            spec = materialize(template,
+                               {"error.alpha": alpha, "r_hat": r_hat})
+            return trial_accuracy(layers, spec, key, xca, xte, yte)
+
+        return traced_constant_violations(
+            point,
+            (0.05, 1e-4, jax.random.PRNGKey(0)),  # repro: ignore[prng-seed]
+            TRACE_SENTINELS[:2], label="classifier trial_accuracy")
+
+    return CompileContract(
+        name="sweep/dynamic-fields-flow-traced",
+        description="values of fields declared traced come from the "
+                    "traced row, never baked in from the template",
+        run=run,
+    )
+
+
+def trace_contracts() -> List[CompileContract]:
+    return [
+        _alpha_grid_contract(),
+        _decode_once_contract(),
+        _traced_fields_contract(),
+    ]
+
+
+def all_contracts(level: str) -> List[CompileContract]:
+    if level == "static":
+        return static_contracts()
+    if level == "trace":
+        return trace_contracts()
+    raise ValueError(f"level must be 'static' or 'trace', got {level!r}")

@@ -1,0 +1,510 @@
+"""The lint passes: hazard classes this repo has actually shipped.
+
+Each rule is a function over a parsed :class:`~repro.analysis.walker.
+Module` returning :class:`~repro.analysis.findings.Finding` rows.  The
+catalog (DESIGN.md §Static-analysis):
+
+``spmd-concat``
+    Concatenation that reassembles slices of one array along an axis —
+    the exact shape of the PR 3 rope miscompile: XLA's SPMD partitioner
+    miscompiles concat-of-slices on a model-sharded dim on multi-axis
+    meshes, *silently* (even an identity slice+concat corrupts).  Any
+    ``concatenate([f(x[..., :h]), g(x[..., h:])], axis)`` where two or
+    more operands contain non-trivial slices of the same base array.
+
+``pallas-tile``
+    Pallas ``BlockSpec`` tile shapes violating Mosaic's TPU layout
+    rules: the lane (last) tile must be a multiple of 128, the sublane
+    (second-to-last) a multiple of 8 (the float32 floor; 16/32 for
+    narrower dtypes).  Interpret mode tolerates any tile, which is how
+    the ``_pick_tile`` sublane-rounded N tile stayed latent until TPU
+    compilation (PR 3).  Literal shapes and one-step constant
+    assignments are checked; unresolvable dynamic tiles are skipped.
+
+``prng-reuse``
+    One PRNG key expression consumed by two sampling calls without an
+    interleaving ``split``/``fold_in`` — correlated draws that silently
+    destroy trial independence.  Straight-line per-function scan; a key
+    reassigned between uses is refreshed, and keys that are themselves
+    fresh ``split``/``fold_in`` call results are exempt.
+
+``prng-seed``
+    Literal integer seeds (``jax.random.PRNGKey(0)``) in library code —
+    seeds must be threaded parameters so callers control determinism
+    (tests and benchmarks pin seeds deliberately and are not scanned).
+    Keys built inside ``jax.eval_shape`` are exempt: they are
+    shape-structural and never draw randomness.
+
+``host-sync``
+    ``.item()`` / ``float()`` / ``np.asarray`` / ``jax.device_get``
+    lexically reachable (same-module call graph) from a jitted body —
+    a trace-time crash at best, a silent device sync in the decode hot
+    path at worst.  Roots are ``@jax.jit`` defs, ``jax.jit(fn)`` /
+    ``jax.jit(jax.vmap(fn))`` call sites, and the returned inner defs
+    of ``jax.jit(make_fn())`` factories.
+
+``bare-assert``
+    ``assert`` in library code: stripped under ``python -O``, and the
+    bare form carries no actionable message (the class cleaned up
+    piecemeal in PRs 4-6 — entry points now raise ``ValueError``).
+
+``silent-except``
+    ``except:`` / ``except Exception:`` whose body is only ``pass`` —
+    the silent-fallback class: failures vanish instead of narrowing the
+    handler to the exceptions actually expected.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis.findings import Finding
+from repro.analysis.walker import Module, rule
+
+# -- canonical name sets ----------------------------------------------------
+
+_CONCAT_FNS = {
+    "jax.numpy.concatenate", "jax.numpy.concat", "numpy.concatenate",
+    "jax.lax.concatenate",
+}
+
+#: jax.random calls that CONSUME a key (draw randomness from it)
+_PRNG_CONSUMERS = {
+    "ball", "bernoulli", "beta", "bits", "categorical", "cauchy", "chisquare",
+    "choice", "dirichlet", "double_sided_maxwell", "exponential", "gamma",
+    "generalized_normal", "geometric", "gumbel", "laplace", "loggamma",
+    "logistic", "maxwell", "multivariate_normal", "normal", "orthogonal",
+    "pareto", "permutation", "poisson", "rademacher", "randint", "rayleigh",
+    "t", "truncated_normal", "uniform", "wald", "weibull_min",
+}
+#: jax.random calls that derive fresh keys (refresh, never consume)
+_PRNG_DERIVERS = {"split", "fold_in", "clone", "PRNGKey", "key"}
+
+_HOST_SYNC_FNS = {
+    "numpy.asarray": "np.asarray",
+    "numpy.array": "np.array",
+    "jax.device_get": "jax.device_get",
+    "float": "float()",
+}
+
+_SUBLANE = 8          # float32 sublane multiple (16/32 for bf16/int8)
+_LANE = 128           # Mosaic lane width, all dtypes
+
+
+# ---------------------------------------------------------------------------
+# (a) SPMD hazard: concat-of-slices
+# ---------------------------------------------------------------------------
+
+
+def _slice_bases(node: ast.AST) -> Set[str]:
+    """Base names of non-trivially-sliced subscripts inside ``node``.
+
+    Non-trivial = the subscript contains a ``Slice`` with an explicit
+    bound (``x[..., :h]``, ``x[h:]``); full slices used for newaxis
+    plumbing (``x[:, None]``) don't count.
+    """
+    bases: Set[str] = set()
+    for sub in ast.walk(node):
+        if not isinstance(sub, ast.Subscript):
+            continue
+        slices = (sub.slice.elts if isinstance(sub.slice, ast.Tuple)
+                  else [sub.slice])
+        if not any(isinstance(s, ast.Slice)
+                   and (s.lower is not None or s.upper is not None)
+                   for s in slices):
+            continue
+        base = sub.value
+        while isinstance(base, (ast.Subscript, ast.Attribute)):
+            base = base.value
+        if isinstance(base, ast.Name):
+            bases.add(base.id)
+    return bases
+
+
+def _slice_aliases(scope: ast.AST) -> Dict[str, Set[str]]:
+    """Names assigned exactly once from a sliced expression in ``scope``,
+    mapped to the slice's base names — resolves the rope's idiom
+    ``x1, x2 = x[..., :half], x[..., half:]`` so the concat check sees
+    through the intermediate names."""
+    aliases: Dict[str, Set[str]] = {}
+    counts: Dict[str, int] = {}
+    for node in ast.walk(scope):
+        if not isinstance(node, ast.Assign):
+            continue
+        for tgt in node.targets:
+            if (isinstance(tgt, (ast.Tuple, ast.List))
+                    and isinstance(node.value, (ast.Tuple, ast.List))
+                    and len(tgt.elts) == len(node.value.elts)):
+                pairs = list(zip(tgt.elts, node.value.elts))
+            else:
+                pairs = [(tgt, node.value)]
+            for t, v in pairs:
+                if isinstance(t, ast.Name):
+                    counts[t.id] = counts.get(t.id, 0) + 1
+                    bases = _slice_bases(v)
+                    if bases:
+                        aliases[t.id] = bases
+    return {n: b for n, b in aliases.items() if counts.get(n) == 1}
+
+
+@rule("spmd-concat")
+def check_spmd_concat(mod: Module) -> List[Finding]:
+    out = []
+    for call in mod.walk_calls():
+        if mod.call_name(call) not in _CONCAT_FNS:
+            continue
+        if not call.args or not isinstance(call.args[0], (ast.List, ast.Tuple)):
+            continue
+        elems = call.args[0].elts
+        if len(elems) < 2:
+            continue
+        scope = mod.enclosing_function(call) or mod.tree
+        aliases = _slice_aliases(scope)
+
+        def elem_bases(e: ast.AST) -> Set[str]:
+            bases = _slice_bases(e)
+            for n in ast.walk(e):
+                if isinstance(n, ast.Name) and n.id in aliases:
+                    bases |= aliases[n.id]
+            return bases
+
+        per_elem = [elem_bases(e) for e in elems]
+        shared = sorted(
+            b for b in set().union(*per_elem)
+            if sum(b in bs for bs in per_elem) >= 2)
+        for base in shared:
+            out.append(Finding(
+                "spmd-concat", mod.path, call.lineno,
+                f"concatenation reassembles slices of {base!r}: "
+                f"concat-of-slices along a model-sharded dim miscompiles "
+                f"in the XLA SPMD partitioner on multi-axis meshes (the "
+                f"PR 3 rope bug) — rewrite with roll/where/elementwise "
+                f"ops on the full array"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# (b) Pallas BlockSpec tile constraints
+# ---------------------------------------------------------------------------
+
+
+@rule("pallas-tile")
+def check_pallas_tile(mod: Module) -> List[Finding]:
+    out = []
+    for call in mod.walk_calls():
+        name = mod.call_name(call)
+        if name is None or not name.endswith("BlockSpec"):
+            continue
+        if not call.args or not isinstance(call.args[0], ast.Tuple):
+            continue
+        shape = call.args[0].elts
+        scope = mod.enclosing_function(call)
+        dims = [mod.int_value(e, scope) for e in shape]
+        if len(dims) >= 1 and dims[-1] is not None:
+            lane = dims[-1]
+            if lane != 1 and lane % _LANE != 0:
+                out.append(Finding(
+                    "pallas-tile", mod.path, call.lineno,
+                    f"BlockSpec lane (last-dim) tile {lane} is not a "
+                    f"multiple of {_LANE}: Mosaic requires full lane "
+                    f"tiles — interpret mode tolerates this, TPU "
+                    f"compilation does not (the _pick_tile bug class); "
+                    f"pad N up to one {_LANE} tile instead"))
+        if len(dims) >= 2 and dims[-2] is not None:
+            sub = dims[-2]
+            if sub != 1 and sub % _SUBLANE != 0:
+                out.append(Finding(
+                    "pallas-tile", mod.path, call.lineno,
+                    f"BlockSpec sublane (second-minor) tile {sub} is not "
+                    f"a multiple of {_SUBLANE} (the float32 sublane "
+                    f"multiple; narrower dtypes need 16/32)"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# (c) PRNG hygiene
+# ---------------------------------------------------------------------------
+
+
+def _prng_call_kind(mod: Module, call: ast.Call) -> Optional[str]:
+    """'consume' / 'derive' / None for a call node."""
+    name = mod.call_name(call)
+    if name is None or not name.startswith("jax.random."):
+        return None
+    tail = name.rsplit(".", 1)[-1]
+    if tail in _PRNG_CONSUMERS:
+        return "consume"
+    if tail in _PRNG_DERIVERS:
+        return "derive"
+    return None
+
+
+def _key_arg(call: ast.Call) -> Optional[ast.AST]:
+    if call.args:
+        return call.args[0]
+    for kw in call.keywords:
+        if kw.arg == "key":
+            return kw.value
+    return None
+
+
+def _assigned_names(stmt: ast.stmt) -> Set[str]:
+    """Names (re)bound by ``stmt`` — assignment targets, loop vars, withitems."""
+    names: Set[str] = set()
+    targets: List[ast.AST] = []
+    if isinstance(stmt, ast.Assign):
+        targets = list(stmt.targets)
+    elif isinstance(stmt, (ast.AugAssign, ast.AnnAssign, ast.For)):
+        targets = [stmt.target]
+    elif isinstance(stmt, ast.With):
+        targets = [i.optional_vars for i in stmt.items if i.optional_vars]
+    for t in targets:
+        for n in ast.walk(t):
+            if isinstance(n, ast.Name):
+                names.add(n.id)
+    for n in ast.walk(stmt):
+        if isinstance(n, ast.NamedExpr) and isinstance(n.target, ast.Name):
+            names.add(n.target.id)
+    return names
+
+
+def _scan_prng_block(mod: Module, body: List[ast.stmt],
+                     consumed: Dict[str, int], out: List[Finding]) -> None:
+    """Branch-aware linear scan: ``consumed`` maps key-expr text to its
+    first-use line and is mutated in place.  Exclusive branches (if/
+    else, try/except) fork a copy each and merge afterwards, so a
+    consumer per branch never counts as sequential reuse."""
+    for stmt in body:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue                # separate scope, scanned separately
+        # consumption before refresh within one statement is fine
+        # (x = normal(key) does not refresh key) — scan uses first
+        for call in mod.own_calls(stmt):
+            if _prng_call_kind(mod, call) != "consume":
+                continue
+            key = _key_arg(call)
+            if key is None:
+                continue
+            if (isinstance(key, ast.Call)
+                    and _prng_call_kind(mod, key) == "derive"):
+                continue                # inline split/fold_in: fresh
+            text = ast.unparse(key)
+            if text in consumed:
+                out.append(Finding(
+                    "prng-reuse", mod.path, call.lineno,
+                    f"PRNG key {text!r} already consumed on line "
+                    f"{consumed[text]} — two consumers of one key "
+                    f"draw correlated randomness; split/fold_in "
+                    f"between uses"))
+            else:
+                consumed[text] = call.lineno
+        rebound = _assigned_names(stmt)
+        if rebound:
+            stale = [t for t in consumed
+                     if rebound.intersection(
+                         n.id for n in ast.walk(ast.parse(t, mode="eval"))
+                         if isinstance(n, ast.Name))]
+            for t in stale:
+                del consumed[t]
+        if isinstance(stmt, ast.If):
+            branches = [stmt.body, stmt.orelse]
+        elif isinstance(stmt, ast.Try):
+            branches = ([stmt.body + stmt.orelse]
+                        + [h.body for h in stmt.handlers])
+        else:
+            for attr in ("body", "orelse"):   # loops, with: sequential
+                sub = getattr(stmt, attr, None)
+                if isinstance(sub, list) and sub:
+                    _scan_prng_block(mod, sub, consumed, out)
+            continue
+        merged: Dict[str, int] = {}
+        for br in branches:
+            fork = dict(consumed)
+            _scan_prng_block(mod, br, fork, out)
+            for t, ln in fork.items():
+                merged[t] = min(ln, merged.get(t, ln))
+        if isinstance(stmt, ast.Try):
+            _scan_prng_block(mod, stmt.finalbody, merged, out)
+        consumed.clear()
+        consumed.update(merged)
+
+
+@rule("prng-reuse")
+def check_prng_reuse(mod: Module) -> List[Finding]:
+    out: List[Finding] = []
+    for info in mod.functions:
+        body = getattr(info.node, "body", None)
+        if isinstance(body, list):          # Lambda bodies: single expr
+            _scan_prng_block(mod, body, {}, out)
+    return out
+
+
+@rule("prng-seed")
+def check_prng_seed(mod: Module) -> List[Finding]:
+    out = []
+    for call in mod.walk_calls():
+        name = mod.call_name(call)
+        if name not in ("jax.random.PRNGKey", "jax.random.key"):
+            continue
+        if not call.args or not isinstance(call.args[0], ast.Constant) \
+                or not isinstance(call.args[0].value, int):
+            continue
+        # shape-structural keys under jax.eval_shape never draw randomness
+        cur = mod.parents.get(call)
+        structural = False
+        while cur is not None:
+            if isinstance(cur, ast.Call) \
+                    and mod.call_name(cur) == "jax.eval_shape":
+                structural = True
+                break
+            cur = mod.parents.get(cur)
+        if structural:
+            continue
+        out.append(Finding(
+            "prng-seed", mod.path, call.lineno,
+            f"literal integer seed {name.rsplit('.', 1)[-1]}"
+            f"({call.args[0].value}) in library code — thread a seed/key "
+            f"parameter instead (pinned seeds belong in tests/benchmarks)"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# (d) host sync reachable from jitted bodies
+# ---------------------------------------------------------------------------
+
+
+def _unwrap_transform(mod: Module, node: ast.AST) -> Optional[ast.AST]:
+    """Peel jax.vmap / functools.partial / grad wrappers off a jit arg."""
+    wrappers = {"jax.vmap", "jax.grad", "jax.value_and_grad",
+                "functools.partial", "jax.checkpoint", "jax.remat"}
+    while isinstance(node, ast.Call) and mod.call_name(node) in wrappers \
+            and node.args:
+        node = node.args[0]
+    return node
+
+
+def _jit_roots(mod: Module) -> List[ast.AST]:
+    """Function defs whose bodies are traced under jax.jit in this module."""
+    roots: List[ast.AST] = []
+
+    def defs_named(name: str) -> List[ast.AST]:
+        return [i.node for i in mod.by_name.get(name, [])]
+
+    for info in mod.functions:
+        decs = getattr(info.node, "decorator_list", [])
+        for d in decs:
+            target = _unwrap_transform(mod, d)
+            if (mod.dotted_name(target) == "jax.jit"
+                    or (isinstance(target, ast.Call)
+                        and mod.call_name(target) == "jax.jit")):
+                roots.append(info.node)
+
+    for call in mod.walk_calls():
+        if mod.call_name(call) != "jax.jit" or not call.args:
+            continue
+        arg = _unwrap_transform(mod, call.args[0])
+        if isinstance(arg, ast.Lambda):
+            roots.append(arg)
+        elif isinstance(arg, ast.Name):
+            roots.extend(defs_named(arg.id))
+        elif isinstance(arg, ast.Call):
+            # jax.jit(self._make_decode_fn()) — the factory's returned
+            # inner defs are the real traced bodies
+            factory = arg.func
+            fname = (factory.attr if isinstance(factory, ast.Attribute)
+                     else factory.id if isinstance(factory, ast.Name)
+                     else None)
+            for fdef in defs_named(fname) if fname else []:
+                for n in ast.walk(fdef):
+                    if isinstance(n, ast.Return) \
+                            and isinstance(n.value, ast.Name):
+                        roots.extend(
+                            d for d in defs_named(n.value.id)
+                            if mod.enclosing_function(d) is fdef)
+    return roots
+
+
+def _reachable(mod: Module, roots: List[ast.AST]) -> List[ast.AST]:
+    """Same-module call-graph closure over bare-name and self.* calls."""
+    seen: List[ast.AST] = []
+    frontier = list(roots)
+    while frontier:
+        fn = frontier.pop()
+        if any(fn is s for s in seen):
+            continue
+        seen.append(fn)
+        for call in mod.walk_calls(fn):
+            f = call.func
+            name = (f.id if isinstance(f, ast.Name)
+                    else f.attr if isinstance(f, ast.Attribute)
+                    and isinstance(f.value, ast.Name) and f.value.id == "self"
+                    else None)
+            if name:
+                frontier.extend(i.node for i in mod.by_name.get(name, []))
+    return seen
+
+
+@rule("host-sync")
+def check_host_sync(mod: Module) -> List[Finding]:
+    out = []
+    flagged = set()
+    for fn in _reachable(mod, _jit_roots(mod)):
+        fn_name = getattr(fn, "name", "<lambda>")
+        for call in mod.walk_calls(fn):
+            site = None
+            if isinstance(call.func, ast.Attribute) \
+                    and call.func.attr == "item" and not call.args:
+                site = ".item()"
+            else:
+                name = mod.call_name(call)
+                if name in _HOST_SYNC_FNS and call.args \
+                        and not isinstance(call.args[0], ast.Constant):
+                    site = _HOST_SYNC_FNS[name]
+            if site and (call.lineno, site) not in flagged:
+                flagged.add((call.lineno, site))
+                out.append(Finding(
+                    "host-sync", mod.path, call.lineno,
+                    f"{site} inside {fn_name!r}, which is traced under "
+                    f"jax.jit in this module — host sync in a jitted hot "
+                    f"path (trace-time crash on traced values, silent "
+                    f"pipeline stall on constants)"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# (e) guard hygiene: bare assert / silent except
+# ---------------------------------------------------------------------------
+
+
+@rule("bare-assert")
+def check_bare_assert(mod: Module) -> List[Finding]:
+    return [
+        Finding("bare-assert", mod.path, node.lineno,
+                "assert in library code: stripped under python -O and "
+                "invisible to callers — raise ValueError (or a typed "
+                "error) with a message instead")
+        for node in ast.walk(mod.tree) if isinstance(node, ast.Assert)
+    ]
+
+
+@rule("silent-except")
+def check_silent_except(mod: Module) -> List[Finding]:
+    out = []
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.ExceptHandler):
+            continue
+        broad = node.type is None or mod.dotted_name(node.type) in (
+            "Exception", "BaseException")
+        silent = all(
+            isinstance(st, ast.Pass)
+            or (isinstance(st, ast.Expr)
+                and isinstance(st.value, ast.Constant))
+            for st in node.body)
+        if broad and silent:
+            out.append(Finding(
+                "silent-except", mod.path, node.lineno,
+                "broad except with a pass-only body swallows every "
+                "failure silently — narrow to the exceptions actually "
+                "expected, or handle/log them"))
+    return out

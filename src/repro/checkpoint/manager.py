@@ -134,7 +134,8 @@ class CheckpointManager:
         Returns (tree, step, extra).
         """
         step = self.latest_step() if step is None else step
-        assert step is not None, "no checkpoint found"
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint found under {self.dir!r}")
         path = os.path.join(self.dir, f"step_{step:09d}")
         with open(os.path.join(path, "manifest.json")) as f:
             manifest = json.load(f)

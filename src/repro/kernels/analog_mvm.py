@@ -96,7 +96,9 @@ def _common_call(kernel, x_parts, g_pos, g_neg, adc_lo, adc_hi, *,
                  bm: int, bn: int, interpret: bool):
     m, p, rows = x_parts.shape
     _, _, n = g_pos.shape
-    assert m % bm == 0 and n % bn == 0, (m, n, bm, bn)
+    if m % bm or n % bn:
+        raise ValueError(
+            f"block shape ({bm}, {bn}) does not tile operand ({m}, {n})")
     grid = (m // bm, n // bn, p)
     lo2 = adc_lo.reshape(1, 1).astype(jnp.float32)
     hi2 = adc_hi.reshape(1, 1).astype(jnp.float32)

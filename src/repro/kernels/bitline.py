@@ -93,7 +93,9 @@ def bitline_mvm_pallas(
         return x @ g
     k, n = g.shape
     m = x.shape[0]
-    assert m % bm == 0 and n % bn == 0, (m, n, bm, bn)
+    if m % bm or n % bn:
+        raise ValueError(
+            f"block shape ({bm}, {bn}) does not tile operand ({m}, {n})")
     r2 = jnp.asarray(r_hat, jnp.float32).reshape(1, 1)
     kern = functools.partial(_bitline_kernel, k=k)
     return pl.pallas_call(
@@ -162,7 +164,9 @@ def analog_bitline_diff_pallas(
     """Fused Design-A MVM under parasitic resistance; (M, N) code units."""
     m, p, rows = x_parts.shape
     _, _, n = g_pos.shape
-    assert m % bm == 0 and n % bn == 0, (m, n, bm, bn)
+    if m % bm or n % bn:
+        raise ValueError(
+            f"block shape ({bm}, {bn}) does not tile operand ({m}, {n})")
     r2 = jnp.asarray(r_hat, jnp.float32).reshape(1, 1)
     lo2 = jnp.asarray(adc_lo, jnp.float32).reshape(1, 1)
     hi2 = jnp.asarray(adc_hi, jnp.float32).reshape(1, 1)

@@ -87,8 +87,8 @@ def _run_cell_inner(arch: str, shape_name: str, *, multi_pod: bool,
                  "alias_size_in_bytes"):
         try:
             mem_d[attr] = int(getattr(mem, attr))
-        except Exception:
-            pass
+        except (AttributeError, TypeError, ValueError):
+            continue        # older jaxlibs omit some memory-analysis attrs
     try:
         cost = dict(compiled.cost_analysis())
         cost = {k: float(v) for k, v in cost.items()
@@ -144,7 +144,8 @@ def main():
                 for mp in (False, True):
                     cells.append((arch, shape, mp))
     else:
-        assert args.arch and args.shape
+        if not (args.arch and args.shape):
+            ap.error("--arch and --shape are required unless --all is set")
         cells.append((args.arch, args.shape, args.multi_pod))
 
     for arch, shape, mp in cells:

@@ -272,7 +272,8 @@ class HloSummary:
 def analyze(text: str) -> HloSummary:
     comps = parse_hlo(text)
     entry = comps.get("__entry__")
-    assert entry is not None, "no ENTRY computation found"
+    if entry is None:
+        raise ValueError("no ENTRY computation found in HLO text")
 
     memo: Dict[int, HloSummary] = {}
 

@@ -350,7 +350,10 @@ class FunctionEvaluator:
 
     def evaluate_group(self, template, dyn_names, dyn_rows, trials, seed,
                        test_n, mesh=None) -> List[List[Any]]:
-        assert not dyn_names
+        if dyn_names:
+            raise ValueError(
+                f"FunctionEvaluator declares no dynamic fields but the "
+                f"executor passed {dyn_names!r}")
         if not self.takes_key:
             vals = [_to_py(self.fn(template))]
         elif self.vectorize:

@@ -130,9 +130,10 @@ def run_sweep(
             template, dyn_names, rows, sweep.trials, sweep.seed,
             sweep.test_n, mesh=mesh)
         wall = time.perf_counter() - t0
-        assert len(values) == len(members), (
-            f"evaluator returned {len(values)} results for "
-            f"{len(members)} points")
+        if len(values) != len(members):
+            raise ValueError(
+                f"evaluator returned {len(values)} results for "
+                f"{len(members)} points")
         per_point = wall / max(len(members), 1)
         for (key, pt, _), vals in zip(members, values):
             res = PointResult.from_values(pt, vals, per_point)

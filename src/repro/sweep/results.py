@@ -81,12 +81,16 @@ class PointResult:
         through here.
         """
         vals = [v[key] for v in self.values if isinstance(v, dict)]
-        assert vals, f"{self.tag} has no dict-valued trials with {key!r}"
+        if not vals:
+            raise KeyError(
+                f"{self.tag} has no dict-valued trials with {key!r}")
         return sum(float(v) for v in vals) / len(vals)
 
     def metric_std(self, key: str) -> float:
         vals = [float(v[key]) for v in self.values if isinstance(v, dict)]
-        assert vals, f"{self.tag} has no dict-valued trials with {key!r}"
+        if not vals:
+            raise KeyError(
+                f"{self.tag} has no dict-valued trials with {key!r}")
         mean = sum(vals) / len(vals)
         return math.sqrt(sum((v - mean) ** 2 for v in vals) / len(vals))
 
@@ -117,7 +121,9 @@ class SweepResults:
 
     def mean(self, tag: str) -> float:
         r = self[tag]
-        assert r.mean is not None, f"{tag} has non-scalar values"
+        if r.mean is None:
+            raise ValueError(
+                f"{tag} has non-scalar values; use metric() instead")
         return r.mean
 
     def metric(self, tag: str, key: str) -> float:

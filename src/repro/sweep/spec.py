@@ -102,7 +102,10 @@ class Axis:
         object.__setattr__(self, "values", tuple(self.values))
         if self.labels is not None:
             object.__setattr__(self, "labels", tuple(self.labels))
-            assert len(self.labels) == len(self.values)
+            if len(self.labels) != len(self.values):
+                raise ValueError(
+                    f"axis {self.path!r}: {len(self.labels)} labels for "
+                    f"{len(self.values)} values")
 
     @property
     def paths(self) -> Tuple[str, ...]:
@@ -113,7 +116,10 @@ class Axis:
         out = []
         for i, v in enumerate(self.values):
             vs = (v,) if isinstance(self.path, str) else tuple(v)
-            assert len(vs) == len(self.paths), (self.path, v)
+            if len(vs) != len(self.paths):
+                raise ValueError(
+                    f"zipped axis {self.path!r} expects {len(self.paths)} "
+                    f"values per entry, got {v!r}")
             assign = dict(zip(self.paths, vs))
             if self.labels is not None:
                 frag = self.labels[i]

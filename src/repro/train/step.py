@@ -74,7 +74,10 @@ def train_step_fn(
     def split_micro(batch):
         def f(x):
             b = x.shape[0]
-            assert b % microbatches == 0, (b, microbatches)
+            if b % microbatches:
+                raise ValueError(
+                    f"batch dim {b} not divisible by {microbatches} "
+                    f"microbatches")
             return x.reshape(microbatches, b // microbatches, *x.shape[1:])
 
         return jax.tree.map(f, batch)

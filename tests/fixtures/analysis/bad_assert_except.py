@@ -1,0 +1,15 @@
+"""Bare assert + silent except-pass in library code."""
+
+
+def tile(m, bm):
+    assert m % bm == 0
+    return m // bm
+
+
+def read_attr(obj):
+    out = {}
+    try:
+        out["size"] = int(obj.size)
+    except Exception:
+        pass
+    return out

@@ -1,0 +1,24 @@
+"""Host syncs reachable from a jitted body: `.item()` inside the jit
+root's same-module call graph — trace-time crash or silent device sync."""
+import jax
+import numpy as np
+
+
+def _postprocess(logits):
+    top = logits.argmax()
+    return top.item()                      # host sync
+
+
+@jax.jit
+def decode_step(logits):
+    return _postprocess(logits)
+
+
+def make_step():
+    def inner(x):
+        return float(np.asarray(x).sum())  # two syncs in a jitted factory
+
+    return inner
+
+
+step = jax.jit(make_step())

@@ -1,0 +1,9 @@
+"""A PRNG key consumed twice without an interleaving split/fold_in:
+the two draws are correlated, silently breaking trial independence."""
+import jax
+
+
+def two_draws(key, shape):
+    a = jax.random.normal(key, shape)
+    b = jax.random.uniform(key, shape)     # correlated with `a`
+    return a + b

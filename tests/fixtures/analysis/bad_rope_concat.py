@@ -1,0 +1,25 @@
+"""The verbatim pre-PR-3 rope: concat-of-slices along head_dim.
+
+This exact function miscompiled in the XLA SPMD partitioner when
+head_dim was model-sharded on a multi-axis mesh (PR 3), silently
+corrupting k.  The analyzer must flag the concatenate on line 17.
+"""
+import jax
+import jax.numpy as jnp
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding.  x: (B, S, H, hd); positions: (B, S) or (S,)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[..., None].astype(jnp.float32) * freqs      # (B, S, half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)

@@ -1,0 +1,20 @@
+"""The `_pick_tile` bug class: a 64-wide lane (N) tile in a BlockSpec.
+
+Mosaic requires the last (lane) block dim to be a multiple of 128;
+64 works under interpret=True on CPU and fails on real hardware —
+exactly how the PR 3 latent bug shipped.
+"""
+import jax
+from jax.experimental import pallas as pl
+
+
+def call_kernel(kernel, x, *, bm: int = 8):
+    m, n = x.shape
+    bn = 64
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm, n // bn),
+        in_specs=[pl.BlockSpec((bm, bn), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+    )(x)

@@ -1,0 +1,13 @@
+"""Host access outside any jitted path — clean."""
+import jax
+import numpy as np
+
+
+@jax.jit
+def decode_step(logits):
+    return logits.argmax()
+
+
+def collect(logits):
+    # host code calling INTO jit, then syncing — the legal direction
+    return int(np.asarray(decode_step(logits)))

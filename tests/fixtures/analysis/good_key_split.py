@@ -1,0 +1,16 @@
+"""Key hygiene done right: split before each consumer — clean."""
+import jax
+
+
+def two_draws(key, shape):
+    k1, k2 = jax.random.split(key)
+    a = jax.random.normal(k1, shape)
+    b = jax.random.uniform(k2, shape)
+    return a + b
+
+
+def rebound(key, shape):
+    a = jax.random.normal(key, shape)
+    key = jax.random.fold_in(key, 1)       # refreshes `key`
+    b = jax.random.uniform(key, shape)
+    return a + b

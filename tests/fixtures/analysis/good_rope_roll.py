@@ -1,0 +1,18 @@
+"""The PR 3 fix: roll-based rotate-half, no slice reassembly — clean."""
+import jax
+import jax.numpy as jnp
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    hd = x.shape[-1]
+    half = hd // 2
+    idx = jnp.arange(hd)
+    freqs = theta ** (-(idx % half).astype(jnp.float32) / half)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    sign = jnp.where(idx < half, -1.0, 1.0)
+    rot = jnp.roll(x, half, axis=-1) * sign
+    return (x * cos + rot * sin).astype(x.dtype)

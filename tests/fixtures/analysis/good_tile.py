@@ -1,0 +1,16 @@
+"""Mosaic-legal tiles: 128-multiple lane, 8-multiple sublane — clean."""
+import jax
+from jax.experimental import pallas as pl
+
+
+def call_kernel(kernel, x, *, bm: int = 8):
+    m, n = x.shape
+    bn = 128
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm, n // bn),
+        in_specs=[pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+                  pl.BlockSpec((1, 1), lambda i, j: (0, 0))],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+    )(x)

@@ -171,3 +171,39 @@ def test_runtime_agreement_on_aged_then_healed_pack(lm):
              .astype(np.int32), int(rng.integers(4, 6))) for _ in range(5)]
     assert runtime_agreement(cfg, params, reqs, pack=healed,
                              max_slots=2, max_len=24) == 1.0
+
+
+def test_drift_grid_is_one_compile_group():
+    """The drift nu x t grid (Fig. 21 horizons) batches through one
+    compiled program — both the exponent and the horizon trace.  The
+    pin previously lived only in ``dynamic_fields_for``'s docstring;
+    declared here as a CompileContract (repro.analysis)."""
+    import jax.numpy as jnp
+
+    from repro.analysis import CompileContract, check_contract
+    from repro.core.adc import ADCConfig
+    from repro.sweep import Axis, ClassifierEvaluator, SweepSpec
+
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    layers = [(jax.random.normal(ks[0], (16, 8)) * 0.25,
+               jnp.zeros((8,)))]
+    ev = ClassifierEvaluator(
+        layers, jax.random.normal(ks[1], (32, 16)),
+        jax.random.normal(ks[2], (64, 16)),
+        jax.random.randint(ks[3], (64,), 0, 8))
+    c = CompileContract(
+        name="test/drift-grid",
+        sweep=SweepSpec(
+            name="t",
+            base=A.AnalogSpec(adc=ADCConfig(style="none"), max_rows=64,
+                              drift=E.power_law_drift(0.2)),
+            axes=(Axis("drift.nu", (0.1, 0.2)),
+                  Axis("drift.t", (1.0, 16.0, 256.0))),
+            trials=1,
+        ),
+        evaluator=lambda: ev,
+        max_groups=1,
+        expect_dynamic=(("drift.nu", "drift.t"),),
+        require_dynamic=("drift.nu", "drift.t"),
+    )
+    assert check_contract(c, "static") == []

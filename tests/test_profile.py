@@ -315,9 +315,10 @@ def test_all_digital_profile_rejected(lm):
 def test_hetero_grid_compile_groups(lm):
     """attn-bits x mlp-bits x alpha: compile groups == profile
     signatures (one per (attn, mlp) bits cell, <= one per signature),
-    with the cell-error axis batched as a traced scalar inside each."""
-    from repro.sweep import (
-        Axis, ServeEvaluator, SweepSpec, compile_groups, point_key)
+    with the cell-error axis batched as a traced scalar inside each.
+    Declared as a CompileContract (repro.analysis)."""
+    from repro.analysis import CompileContract, check_contract
+    from repro.sweep import Axis, ServeEvaluator, SweepSpec
 
     cfg, params, ds = lm
     ev = ServeEvaluator(cfg, params, ds.batch(998)["tokens"],
@@ -332,15 +333,18 @@ def test_hetero_grid_compile_groups(lm):
     )
     pts = sweep.expand()
     assert len(pts) == 8
-    groups = compile_groups(
-        [(point_key(ev.signature(), p, sweep.point_protocol()), p)
-         for p in pts], ev)
     sigs = {set_field(p.spec, "attn:error.alpha", 0.0).signature()
             for p in pts}
-    assert len(groups) == len(sigs) == 4
-    for _, dyn_names, members in groups:
-        assert dyn_names == ("attn:error.alpha",)
-        assert len(members) == 2
+    assert len(sigs) == 4
+    c = CompileContract(
+        name="test/hetero-grid",
+        sweep=sweep,
+        evaluator=lambda: ev,
+        max_groups=len(sigs), min_groups=len(sigs),
+        expect_dynamic=(("attn:error.alpha",),),
+        require_dynamic=("attn:error.alpha",),
+    )
+    assert check_contract(c, "static") == []
     # codes shared across ADC-bit cells (mapping-identical), per-site keyed
     k1 = ev._codes_key(pts[0].spec)
     assert all(ev._codes_key(p.spec) == k1 for p in pts)
@@ -358,17 +362,23 @@ def test_benchmark_sweep_one_group_per_signature(lm):
         sys.path.insert(0, root)
     from benchmarks.hetero_precision import hetero_sweep
 
-    from repro.sweep import ServeEvaluator, compile_groups, point_key
+    from repro.analysis import CompileContract, check_contract
+    from repro.sweep import ServeEvaluator
 
     cfg, params, ds = lm
     ev = ServeEvaluator(cfg, params, ds.batch(998)["tokens"],
                         ds.batch(999)["tokens"], ds.batch(999)["targets"])
     sweep = hetero_sweep()
     pts = sweep.expand()
-    groups = compile_groups(
-        [(point_key(ev.signature(), p, sweep.point_protocol()), p)
-         for p in pts], ev)
-    assert len(groups) == len({p.spec.signature() for p in pts}) == len(pts)
+    n = len({p.spec.signature() for p in pts})
+    assert n == len(pts)
+    c = CompileContract(
+        name="test/benchmark-hetero",
+        sweep=sweep,
+        evaluator=lambda: ev,
+        max_groups=n, min_groups=n,
+    )
+    assert check_contract(c, "static") == []
 
 
 def test_codes_key_head_resolution_matches_program_path(lm):

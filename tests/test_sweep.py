@@ -18,6 +18,7 @@ from repro.core.adc import ADCConfig
 from repro.core.analog import AnalogSpec, program, program_codes, program_from_codes
 from repro.core.errors import state_independent, state_proportional
 from repro.core.mapping import MappingConfig
+from repro.analysis import CompileContract, check_contract
 from repro.sweep import (
     Axis,
     ClassifierEvaluator,
@@ -88,85 +89,117 @@ def test_expand_explicit_points():
 # compile-group batching
 # ---------------------------------------------------------------------------
 
-def test_alpha_grid_is_one_compile_group(vehicle):
-    ev = _evaluator(vehicle)
-    sweep = SweepSpec(
+def _alpha_sweep():
+    return SweepSpec(
         name="t",
         base=AnalogSpec(adc=ADCConfig(style="none"),
                         error=state_proportional(0.0)),
         axes=(Axis("error.alpha", (0.01, 0.02, 0.05, 0.1)),),
         trials=2,
     )
-    pts = sweep.expand()
-    groups = compile_groups(
-        [(point_key(ev.signature(), p, sweep.point_protocol()), p)
-         for p in pts], ev)
-    assert len(groups) == 1
-    _, dyn_names, members = groups[0]
-    assert dyn_names == ("error.alpha",)
-    assert len(members) == 4
+
+
+def test_alpha_grid_is_one_compile_group(vehicle):
+    """Declared as a CompileContract (repro.analysis): 4 alpha values,
+    one compiled program, alpha traced."""
+    c = CompileContract(
+        name="test/alpha-axis",
+        sweep=_alpha_sweep(),
+        evaluator=lambda: _evaluator(vehicle),
+        max_groups=1,
+        expect_dynamic=(("error.alpha",),),
+        require_dynamic=("error.alpha",),
+    )
+    assert check_contract(c, "static") == []
 
 
 def test_constant_dynamic_field_stays_static(vehicle):
     """A field that does not vary must not be traced (bit-exactness)."""
-    ev = _evaluator(vehicle)
-    sweep = SweepSpec(
-        name="t",
-        base=AnalogSpec(adc=ADCConfig(style="none"),
-                        error=state_proportional(0.05)),
-        axes=(Axis("max_rows", (72, 1152)),),
-        trials=1,
+    c = CompileContract(
+        name="test/constant-field-static",
+        sweep=SweepSpec(
+            name="t",
+            base=AnalogSpec(adc=ADCConfig(style="none"),
+                            error=state_proportional(0.05)),
+            axes=(Axis("max_rows", (72, 1152)),),
+            trials=1,
+        ),
+        evaluator=lambda: _evaluator(vehicle),
+        # max_rows is static: separate shapes; alpha/on_off constant ->
+        # not dynamic in either group
+        max_groups=2, min_groups=2,
+        expect_dynamic=((),),
     )
-    pts = sweep.expand()
-    groups = compile_groups(
-        [(point_key(ev.signature(), p, sweep.point_protocol()), p)
-         for p in pts], ev)
-    assert len(groups) == 2           # max_rows is static: separate shapes
-    for _, dyn_names, _ in groups:
-        assert dyn_names == ()        # alpha/on_off constant -> not dynamic
+    assert check_contract(c, "static") == []
 
 
 def test_r_hat_axis_is_one_compile_group(vehicle):
     """The Fig. 19 parasitic axis batches as a traced scalar: every
     ``r_hat > 0`` level shares one compiled program (the tridiagonal solve
     is structurally identical), instead of one compile group per level."""
-    ev = _evaluator(vehicle)
-    sweep = SweepSpec(
-        name="t",
-        base=AnalogSpec(adc=ADCConfig(style="none"), max_rows=64),
-        axes=(Axis("r_hat", (1e-5, 1e-4, 1e-3)),),
-        trials=1,
+    c = CompileContract(
+        name="test/r-hat-axis",
+        sweep=SweepSpec(
+            name="t",
+            base=AnalogSpec(adc=ADCConfig(style="none"), max_rows=64),
+            axes=(Axis("r_hat", (1e-5, 1e-4, 1e-3)),),
+            trials=1,
+        ),
+        evaluator=lambda: _evaluator(vehicle),
+        max_groups=1,
+        require_dynamic=("r_hat",),
     )
-    pts = sweep.expand()
-    groups = compile_groups(
-        [(point_key(ev.signature(), p, sweep.point_protocol()), p)
-         for p in pts], ev)
-    assert len(groups) == 1
-    _, dyn_names, members = groups[0]
-    assert "r_hat" in dyn_names
-    assert len(members) == 3
+    assert check_contract(c, "static") == []
 
 
 def test_r_hat_on_off_split_is_static(vehicle):
     """``r_hat == 0`` is a different compiled program (no solve in the
     graph): it must land in its own group, never be traced to zero."""
-    ev = _evaluator(vehicle)
-    sweep = SweepSpec(
-        name="t",
-        base=AnalogSpec(adc=ADCConfig(style="none"), max_rows=64),
-        axes=(Axis("r_hat", (0.0, 1e-4, 1e-3)),),
-        trials=1,
+    c = CompileContract(
+        name="test/r-hat-on-off-split",
+        sweep=SweepSpec(
+            name="t",
+            base=AnalogSpec(adc=ADCConfig(style="none"), max_rows=64),
+            axes=(Axis("r_hat", (0.0, 1e-4, 1e-3)),),
+            trials=1,
+        ),
+        evaluator=lambda: _evaluator(vehicle),
+        max_groups=2, min_groups=2,
+        expect_dynamic=((), ("r_hat",)),
+        require_dynamic=("r_hat",),
     )
+    assert check_contract(c, "static") == []
+
+
+def test_compile_contract_canary(vehicle):
+    """The checker validated against the old method: the original
+    hand-written compile_groups assertions for the alpha grid, side by
+    side with the CompileContract declaration of the same pin — and a
+    falsified declaration must fail."""
+    import dataclasses
+
+    ev = _evaluator(vehicle)
+    sweep = _alpha_sweep()
     pts = sweep.expand()
     groups = compile_groups(
         [(point_key(ev.signature(), p, sweep.point_protocol()), p)
          for p in pts], ev)
-    assert len(groups) == 2
-    by_dyn = {dyn_names: members for _, dyn_names, members in groups}
-    off = [names for names in by_dyn if "r_hat" not in names]
-    on = [names for names in by_dyn if "r_hat" in names]
-    assert len(off) == 1 and len(by_dyn[off[0]]) == 1
-    assert len(on) == 1 and len(by_dyn[on[0]]) == 2
+    # the original PR 3 pin, verbatim
+    assert len(groups) == 1
+    _, dyn_names, members = groups[0]
+    assert dyn_names == ("error.alpha",)
+    assert len(members) == 4
+    # the declaration agrees with the raw partition
+    c = CompileContract(
+        name="test/canary", sweep=sweep,
+        evaluator=lambda: _evaluator(vehicle),
+        max_groups=1, expect_dynamic=(("error.alpha",),),
+        require_dynamic=("error.alpha",))
+    assert check_contract(c, "static") == []
+    # and the checker actually discriminates: tighten the budget past
+    # what the raw partition shows and it must report
+    wrong = dataclasses.replace(c, max_groups=0)
+    assert len(check_contract(wrong, "static")) == 1
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,104 @@
+"""The analyzer CLI: hazard lint + compile contracts, CI-gateable.
+
+Runs the ``repro.analysis`` lint rules over source trees and checks the
+repo's declared :class:`CompileContract` suite.  Findings that are
+neither inline-suppressed (``# repro: ignore[rule]``) nor present in the
+committed baseline (``tools/analyze_baseline.json``) fail ``--ci`` mode
+with a nonzero exit — the ``analyze`` CI job runs exactly::
+
+    PYTHONPATH=src python tools/analyze.py --ci
+
+which lints ``src/repro`` and verifies the static (structural) contract
+level.  The nightly tier-2 job adds ``--contracts trace`` to execute the
+real jitted entry points under compilation counting.
+
+Other entry points::
+
+    python tools/analyze.py src/repro benchmarks     # lint, human output
+    python tools/analyze.py --rules bare-assert ...  # one rule only
+    python tools/analyze.py --list-rules
+    python tools/analyze.py --write-baseline         # grandfather current
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+
+from repro.analysis import (          # noqa: E402
+    Baseline,
+    analyze_paths,
+    check_contracts,
+    render,
+    rule_ids,
+)
+
+DEFAULT_PATHS = ["src/repro"]
+DEFAULT_BASELINE = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                "analyze_baseline.json")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="JAX/Pallas hazard lint + compile-contract checker")
+    ap.add_argument("paths", nargs="*", default=None,
+                    help=f"files or trees to lint (default: {DEFAULT_PATHS})")
+    ap.add_argument("--ci", action="store_true",
+                    help="gate mode: lint + static contracts, exit nonzero "
+                         "on any non-baselined finding")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE,
+                    help="baseline JSON path (default: %(default)s)")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="write current lint findings to the baseline and "
+                         "exit (grandfathering — prefer fixing)")
+    ap.add_argument("--rules", default=None,
+                    help="comma-separated rule subset to run")
+    ap.add_argument("--contracts", choices=("none", "static", "trace"),
+                    default=None,
+                    help="contract level to check (default: static under "
+                         "--ci, none otherwise; trace executes real jitted "
+                         "entry points)")
+    ap.add_argument("--list-rules", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        print("\n".join(rule_ids()))
+        return 0
+
+    paths = args.paths or DEFAULT_PATHS
+    only = args.rules.split(",") if args.rules else None
+    findings = analyze_paths(paths, only=only)
+
+    if args.write_baseline:
+        Baseline.write(args.baseline, findings)
+        print(f"wrote {len(findings)} finding(s) to {args.baseline}")
+        return 0
+
+    level = args.contracts
+    if level is None:
+        level = "static" if args.ci else "none"
+    if level != "none":
+        from repro.analysis.repo_contracts import all_contracts
+
+        findings.extend(check_contracts(all_contracts(level), level))
+
+    gated = Baseline.load(args.baseline).filter(findings)
+    baselined = len(findings) - len(gated)
+
+    print(render(gated))
+    if baselined:
+        print(f"({baselined} baselined finding(s) not shown)")
+    if args.ci and gated:
+        print("analyze: FAIL — fix the findings above, suppress a reviewed "
+              "exception inline with '# repro: ignore[rule]', or (last "
+              "resort) --write-baseline", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
