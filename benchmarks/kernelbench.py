@@ -74,6 +74,60 @@ def kernel_micro(timer: Timer):
              f"ref_us={us_r:.1f} tridiag_solves={m*n}")
 
 
+def paged_decode_bench(timer: Timer):
+    """Paged-attention decode grid vs the jnp gather oracle.
+
+    Long-cache decode shapes (B rows x 1 query token x K cached tokens):
+    the block-table walk the serving runtime's ``backend="pallas"`` path
+    runs every step.  Bitwise equality against
+    ``ref.paged_attention_decode`` is a *gate* — any mismatch raises and
+    fails the benchmark run, mirroring the ``array_equal`` pin in
+    ``tests/test_kernels.py`` at larger shapes."""
+    import numpy as np
+
+    # (B, KV heads, group, head dim, page size, pages per row)
+    shapes = [
+        (1, 4, 2, 64, 8, 16),    # single row, 128-token cache
+        (4, 4, 2, 64, 8, 16),
+        (8, 2, 4, 64, 8, 32),    # 256-token cache, GQA 4x
+        (4, 8, 1, 32, 16, 16),   # MHA, 256-token cache, big pages
+    ]
+    for (b, kv, g, hd, ps, npg) in shapes:
+        h = kv * g
+        pool = 1 + b * npg
+        rng = np.random.default_rng(b * npg)
+        ks = jax.random.split(jax.random.PRNGKey(b + npg), 3)
+        q = jax.random.normal(ks[0], (b, h, hd), jnp.float32)
+        kp = jax.random.normal(ks[1], (pool, ps, kv, hd), jnp.float32)
+        vp = jax.random.normal(ks[2], (pool, ps, kv, hd), jnp.float32)
+        perm = rng.permutation(np.arange(1, pool))
+        ptab = np.zeros((b, npg), np.int32)
+        kv_len = np.zeros((b,), np.int32)
+        for i in range(b):       # ragged fills, shuffled non-sink pages
+            n = int(rng.integers(ps, npg * ps + 1))
+            used = -(-n // ps)
+            ptab[i, :used] = perm[i * npg:i * npg + used]
+            kv_len[i] = n
+        ptab, kv_len = jnp.asarray(ptab), jnp.asarray(kv_len)
+        f_k = jax.jit(lambda q, kp, vp, t, l: ops.paged_attention(
+            q, kp, vp, t, l))
+        f_r = jax.jit(lambda q, kp, vp, t, l: ref.paged_attention_decode(
+            q, kp, vp, t, l))
+        out_k = f_k(q, kp, vp, ptab, kv_len)
+        out_r = f_r(q, kp, vp, ptab, kv_len)
+        if not np.array_equal(np.asarray(out_k), np.asarray(out_r)):
+            bad = int(np.sum(np.asarray(out_k) != np.asarray(out_r)))
+            raise RuntimeError(
+                f"paged decode kernel diverged from gather oracle at "
+                f"B={b} KV={kv} g={g} hd={hd} ps={ps} NP={npg}: "
+                f"{bad} mismatched elements")
+        us_k = timer.time(f_k, q, kp, vp, ptab, kv_len)
+        us_r = timer.time(f_r, q, kp, vp, ptab, kv_len)
+        emit(f"kernel_paged_decode_b{b}_k{kv}x{g}x{hd}_p{ps}x{npg}", us_k,
+             f"ref_us={us_r:.1f} cache_toks={int(np.max(kv_len))} "
+             f"bitwise=True interpret=True")
+
+
 def bitline_bench(timer: Timer):
     """Pallas bit-line solve vs the dense vmap-of-scan reference, plus the
     fused parasitic Design-A kernel, on an (M, N, K) grid."""
@@ -215,6 +269,9 @@ def main(timer: Timer):
         kernel_micro(timer)
     except Exception as e:
         emit("kernel_micro_ERROR", 0.0, repr(e)[:200])
+    # NOT wrapped: bitwise kernel-vs-oracle equality is a gate, and a
+    # mismatch must fail the run (benchmarks.run exits nonzero)
+    paged_decode_bench(timer)
     try:
         bitline_bench(timer)
     except Exception as e:

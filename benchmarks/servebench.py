@@ -36,8 +36,9 @@ import numpy as np
 
 from repro.core import analog as A
 from repro.core import errors as E
-from repro.serve import ServeRuntime, calibrate_lm, program_lm
-from repro.sweep.serve_eval import runtime_agreement
+from repro.serve import PagedServeRuntime, ServeRuntime, calibrate_lm, program_lm
+from repro.serve.runtime import SamplerConfig
+from repro.sweep.serve_eval import paged_runtime_agreement, runtime_agreement
 
 from benchmarks.common import Timer, emit
 from benchmarks.lm_accuracy import CALIB_STEP, trained_lm
@@ -47,6 +48,23 @@ MAX_LEN = 80
 BUCKETS = (8, 16)
 #: long-tail generation budget — the static scheduler pads every gang to it
 TAIL_NEW = 64
+
+# paged-vs-dense comparison: equal KV *token* budget.  Dense KV capacity
+# is MAX_SLOTS * MAX_LEN = 640 token slots; the paged pool gets exactly
+# the same 640 tokens (80 data pages of 8) plus the reserved sink page,
+# but may spread them over twice the decode lanes because slots no
+# longer pre-own max_len tokens each.
+PAGE_SIZE = 8
+PAGED_SLOTS = 16
+PAGED_PAGES = MAX_SLOTS * MAX_LEN // PAGE_SIZE + 1
+#: shared system-prompt length for the prefix-heavy trace (3 full pages)
+PREFIX_LEN = 24
+#: generation budgets on the prefix trace: moderate and uniform, so the
+#: drain is lane-capacity-bound (what paging pools) rather than
+#: serialized behind one long straggler whose budget alone sets the
+#: step count for both runtimes
+PREFIX_NEW_LO, PREFIX_NEW_HI = 6, 15
+PREFIX_BUCKETS = (8, 32)
 
 
 def request_trace(n: int, vocab: int, seed: int = 0):
@@ -62,6 +80,24 @@ def request_trace(n: int, vocab: int, seed: int = 0):
         n_new = TAIL_NEW if i % MAX_SLOTS == 0 else int(rng.integers(2, 7))
         prompt = rng.integers(0, vocab, size=plen).astype(np.int32)
         reqs.append((prompt, n_new))
+    return reqs
+
+
+def shared_prefix_trace(n: int, vocab: int, seed: int = 3):
+    """A prefix-heavy trace: every prompt opens with the same
+    PREFIX_LEN-token system prompt (3 full pages — radix-cache fodder)
+    followed by a unique 2..6-token tail, and carries a uniform
+    moderate PREFIX_NEW_LO..PREFIX_NEW_HI generation budget — enough
+    decode work that the drain measures how many lanes the KV budget
+    sustains, staggered retirements keeping admission continuous."""
+    rng = np.random.default_rng(seed)
+    prefix = rng.integers(0, vocab, size=PREFIX_LEN).astype(np.int32)
+    reqs = []
+    for i in range(n):
+        tail = rng.integers(0, vocab,
+                            size=int(rng.integers(2, 7))).astype(np.int32)
+        n_new = int(rng.integers(PREFIX_NEW_LO, PREFIX_NEW_HI))
+        reqs.append((np.concatenate([prefix, tail]), n_new))
     return reqs
 
 
@@ -111,6 +147,44 @@ def bench_mode(cfg, params, pack, reqs, *, gang: bool) -> dict:
     return r
 
 
+def bench_paged_pair(cfg, params, pack, reqs):
+    """Dense (8 slots x 80) vs paged (16 lanes, same 640-token pool) on
+    the shared-prefix trace; same warm + best-of-2 protocol as
+    ``bench_mode``."""
+    rows = {}
+    makers = {
+        "dense_kv": lambda: ServeRuntime(
+            cfg, params, pack=pack, max_slots=MAX_SLOTS, max_len=MAX_LEN,
+            buckets=PREFIX_BUCKETS),
+        "paged_kv": lambda: PagedServeRuntime(
+            cfg, params, pack=pack, max_slots=PAGED_SLOTS, max_len=MAX_LEN,
+            buckets=PREFIX_BUCKETS, page_size=PAGE_SIZE,
+            num_pages=PAGED_PAGES),
+    }
+    for mode, make_rt in makers.items():
+        rt = make_rt()
+        drain(rt, reqs)                  # warm: compile every group once
+        runs = []
+        for _ in range(2):
+            rt.reset()
+            runs.append(drain(rt, reqs))
+        r = rows[mode] = min(runs, key=lambda x: x["wall_s"])
+        r["tok_per_step"] = r["tokens"] / max(r["steps"], 1)
+        extra = ""
+        if isinstance(rt, PagedServeRuntime):
+            rt.check()                   # pool/radix invariants post-drain
+            s = rt.stats
+            extra = (f" prefix_hits={s['prefix_hits']} "
+                     f"reused_toks={s['prefix_tokens_reused']} "
+                     f"evictions={s['cache_evictions']} "
+                     f"stalls={s['admission_stalls']}")
+        emit(f"servebench_{mode}", r["wall_s"] * 1e6 / r["tokens"],
+             f"tok/s={r['tok_per_s']:.1f} tok/step={r['tok_per_step']:.2f} "
+             f"occupancy={r['occupancy']:.2f} steps={r['steps']} "
+             f"prefills={r['prefills']}{extra}")
+    return rows
+
+
 def main(timer: Timer):
     from benchmarks import common
 
@@ -146,6 +220,43 @@ def main(timer: Timer):
     emit("servebench_agreement", 0.0,
          f"runtime-vs-decode_lm greedy agreement={agreement:.4f}")
 
+    # paged KV + prefix sharing vs dense slots at equal KV token budget
+    # on a shared-prefix heavy-tailed trace
+    sreqs = shared_prefix_trace(n_requests, cfg.vocab)
+    prows = bench_paged_pair(cfg, params, pack, sreqs)
+    step_gain = (prows["paged_kv"]["tok_per_step"]
+                 / prows["dense_kv"]["tok_per_step"])
+    tokps_gain = (prows["paged_kv"]["tok_per_s"]
+                  / prows["dense_kv"]["tok_per_s"])
+    paged_gain = max(step_gain, tokps_gain)
+    emit("servebench_claim_paged_gain", 0.0,
+         f"tok/step ratio={step_gain:.2f} tok/s ratio={tokps_gain:.2f} "
+         f"(>=1.3 required): {paged_gain >= 1.3}")
+
+    # paged-vs-dense bit-exactness at the served analog config, greedy
+    # AND seeded sampling, on the mixed servebench trace
+    agree_paged = [(p[:12], min(n, 8)) for p, n in reqs[:8]]
+    pg_greedy = paged_runtime_agreement(
+        cfg, params, agree_paged, pack=pack, max_slots=4,
+        page_size=PAGE_SIZE)
+    pg_seeded = paged_runtime_agreement(
+        cfg, params, agree_paged, pack=pack, max_slots=4,
+        page_size=PAGE_SIZE,
+        sampler=SamplerConfig(kind="top_k", temperature=0.8, top_k=16),
+        seed=11)
+    emit("servebench_paged_agreement", 0.0,
+         f"paged-vs-dense agreement greedy={pg_greedy:.4f} "
+         f"seeded={pg_seeded:.4f}")
+
+    if pg_greedy != 1.0 or pg_seeded != 1.0:
+        raise RuntimeError(
+            f"paged runtime diverged from the dense-slot oracle: "
+            f"greedy {pg_greedy} / seeded {pg_seeded} != 1.0")
+    if paged_gain < 1.3:
+        raise RuntimeError(
+            f"paged KV gain {paged_gain:.2f}x < 1.3x over dense slots at "
+            f"equal KV budget (tok/step {step_gain:.2f}x, "
+            f"tok/s {tokps_gain:.2f}x)")
     if agreement != 1.0:
         raise RuntimeError(
             f"continuous-batching runtime diverged from decode_lm: "

@@ -14,6 +14,9 @@ one protects):
   concrete ones in double);
 * drift's nu x t grid (Fig. 21 horizons) compiles once;
 * ``ServeRuntime``'s decode step compiles once across a ragged trace;
+* ``PagedServeRuntime``'s decode step compiles once across a trace with
+  prefix hits and radix evictions (block tables traced, ``page_size``
+  static), and each paged prefill group compiles exactly once;
 * values for fields declared traced flow through the traced row, never
   out of the template (a template value silently reused by every other
   axis point is the worst failure: wrong numbers, no crash).
@@ -210,6 +213,92 @@ def _decode_once_contract() -> CompileContract:
     )
 
 
+_paged_state: dict = {}
+
+
+def _paged_run():
+    """Serve one deterministic paged trace (prefix hits, evictions,
+    admission stalls all exercised) and cache the runtime for both paged
+    contracts — the trace is served once, inspected twice."""
+    if "rt" in _paged_state:
+        return
+    import jax
+    import numpy as np
+
+    from repro.configs import get_smoke_config
+    from repro.models.registry import get_model
+    from repro.serve import PagedServeRuntime
+
+    cfg = get_smoke_config("qwen1.5-4b")
+    params = get_model(cfg).init_params(
+        cfg, jax.random.PRNGKey(0))  # repro: ignore[prng-seed]
+    # 13 data pages for 3 slots of up to 8 pages each: roomy enough for
+    # the shared prefix to survive in the radix cache (hits), tight
+    # enough that the distinct-prompt second wave must evict it
+    rt = PagedServeRuntime(cfg, params, max_slots=3, max_len=32,
+                           page_size=4, num_pages=14)
+    rng = np.random.default_rng(0)
+    shared = rng.integers(0, cfg.vocab, size=9).astype(np.int32)
+    for i in range(9):     # mixed ragged trace, every other prompt shared
+        if i % 2:
+            tail = rng.integers(
+                0, cfg.vocab, size=int(rng.integers(1, 5))).astype(np.int32)
+            prompt = np.concatenate([shared, tail])
+        else:
+            prompt = rng.integers(
+                0, cfg.vocab, size=int(rng.integers(3, 13))).astype(np.int32)
+        rt.submit(prompt, max_new_tokens=int(rng.integers(2, 7)), uid=i)
+    rt.run()
+    for i in range(6):     # distinct-prefix wave: forces radix eviction
+        prompt = rng.integers(
+            0, cfg.vocab, size=int(rng.integers(10, 13))).astype(np.int32)
+        rt.submit(prompt, max_new_tokens=4, uid=100 + i)
+    rt.run()
+    rt.check()
+    s = rt.stats
+    if s["prefix_hits"] <= 0:
+        raise RuntimeError("contract trace produced no prefix hits")
+    if s["cache_evictions"] <= 0:
+        raise RuntimeError("contract trace produced no radix evictions")
+    _paged_state["rt"] = rt
+
+
+def _paged_decode_once_contract() -> CompileContract:
+    return CompileContract(
+        name="serve/paged-decode-compiles-once",
+        description="PagedServeRuntime's decode step compiles once "
+                    "across a mixed trace with prefix hits and radix "
+                    "evictions (block tables are traced data; page_size "
+                    "and table width are the only static shape bits)",
+        run=_paged_run,
+        entries=lambda: [_paged_state["rt"]._decode_fn],
+        max_compiles=1,
+    )
+
+
+def _paged_prefill_budget_contract() -> CompileContract:
+    def run():
+        from repro.analysis.contracts import jit_cache_size
+
+        _paged_run()
+        rt = _paged_state["rt"]
+        return [
+            f"paged prefill group {key} holds {jit_cache_size(fn)} "
+            f"compilations (expected exactly 1)"
+            for key, fn in rt._prefill_fns.items()
+            if jit_cache_size(fn) != 1
+        ]
+
+    return CompileContract(
+        name="serve/paged-prefill-group-budget",
+        description="every paged prefill compile group — one per "
+                    "(shared-ctx, suffix bucket, gang size) — compiles "
+                    "exactly once; cache-hit geometry lives in the key, "
+                    "page contents in traced operands",
+        run=run,
+    )
+
+
 def _traced_fields_contract() -> CompileContract:
     def run():
         import jax
@@ -251,6 +340,8 @@ def trace_contracts() -> List[CompileContract]:
     return [
         _alpha_grid_contract(),
         _decode_once_contract(),
+        _paged_decode_once_contract(),
+        _paged_prefill_budget_contract(),
         _traced_fields_contract(),
     ]
 

@@ -15,6 +15,7 @@ import jax.numpy as jnp
 
 from repro.kernels import analog_mvm as _k_mvm
 from repro.kernels import bitline as _k_bl
+from repro.kernels import paged as _k_paged
 
 
 def _use_interpret() -> bool:
@@ -110,6 +111,66 @@ def analog_mvm_bitserial(
         bm=bm, bn=bn, interpret=interpret,
     )
     return out[:m, :n]
+
+
+def paged_attention(
+    q: jax.Array,          # (B, H, hd)
+    k_pages: jax.Array,    # (P, page_size, KV, hd)
+    v_pages: jax.Array,    # (P, page_size, KV, hd)
+    ptab: jax.Array,       # (B, NP) int32 block table
+    kv_len: jax.Array,     # (B,) int32 valid positions per row
+    *,
+    scale: float | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Decode-step attention over a paged KV pool; returns (B, H, hd).
+
+    The page gather happens inside the kernel via scalar-prefetched
+    block-table indices, so the dense ``(B, NP*page)`` gather is never
+    materialized.  Bit-exact vs ``ref.paged_attention_decode`` in
+    float32 (positions >= ``kv_len[b]`` contribute exact zeros).
+
+    TPU alignment pads the head dim (lane) to 128 with zeros — exact, as
+    the padded lanes contribute zero dot products and are sliced away.
+    ``page_size`` indexes absolute token positions so it can never be
+    padded; Mosaic needs it sublane-aligned (multiple of 8).
+
+    ``page_size == 1`` is canonicalized before the kernel runs: a row of
+    ``NP`` one-token pages *is* one page of ``NP`` tokens, so the pool is
+    pre-gathered into a per-row pool ``(B, NP, KV, hd)`` with the identity
+    block table.  Size-1 page einsums degenerate to elementwise code whose
+    FMA contraction is fusion-context-dependent on CPU (the same dot can
+    round differently between the kernel's two phases), which breaks the
+    bitwise contract; the canonical shape keeps every contraction a real
+    ``dot_general``.  ``ref.paged_attention_decode`` applies the identical
+    rewrite, so the bitwise comparison is over the same canonical problem.
+    """
+    interpret = _use_interpret() if interpret is None else interpret
+    b, h, hd = q.shape
+    page_size = k_pages.shape[1]
+    n_pages = ptab.shape[1]
+    scale = hd ** -0.5 if scale is None else scale
+    qp, kp, vp = q, k_pages, v_pages
+    if not interpret and page_size % 8:
+        raise ValueError(
+            f"page_size={page_size} must be a multiple of 8 (sublane) "
+            "for the compiled TPU kernel")
+    if page_size == 1 and n_pages > 1:
+        ptab = jnp.asarray(ptab, jnp.int32)
+        kp = kp[:, 0][ptab]                  # (B, NP, KV, hd) per-row pool
+        vp = vp[:, 0][ptab]
+        ptab = jnp.arange(b, dtype=jnp.int32)[:, None]
+    if not interpret:
+        qp = _pad_to(qp, 2, 128)
+        kp = _pad_to(kp, 3, 128)
+        vp = _pad_to(vp, 3, 128)
+    out = _k_paged.paged_attention_pallas(
+        qp.astype(jnp.float32), kp.astype(jnp.float32),
+        vp.astype(jnp.float32),
+        jnp.asarray(ptab, jnp.int32), jnp.asarray(kv_len, jnp.int32),
+        scale=float(scale), interpret=interpret,
+    )
+    return out[:, :, :hd].astype(q.dtype)
 
 
 def bitline_mvm(

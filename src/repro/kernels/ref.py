@@ -72,6 +72,99 @@ def analog_mvm_bitserial(
     return acc * gain
 
 
+def paged_attention_decode(
+    q: jax.Array,          # (B, H, hd)
+    k_pages: jax.Array,    # (P, page_size, KV, hd)
+    v_pages: jax.Array,    # (P, page_size, KV, hd)
+    ptab: jax.Array,       # (B, NP) int32 block table
+    kv_len: jax.Array,     # (B,) int32 valid positions per row
+    *,
+    scale=None,
+) -> jax.Array:
+    """Gather oracle for the paged-attention decode kernel.
+
+    Walks the block table page by page in the kernel's exact two-phase
+    order — a max-only pass, then a pure-add accumulation pass against
+    the global max — with the same per-cell einsum contractions and
+    masking constant.  The two-phase form has no ``acc * corr + x``
+    rescale, so there is no multiply-add for the compiler to contract
+    into an FMA differently per compilation context; that is what makes
+    the interpret-mode kernel *bit-exact* against this oracle
+    (``tests/test_kernels.py`` pins ``array_equal``).  Positions at or
+    beyond ``kv_len[b]`` contribute exact zeros, so the result is
+    invariant to block-table tail padding.
+
+    ``page_size == 1`` is canonicalized to a single page of ``NP``
+    tokens per row — the identical rewrite ``ops.paged_attention``
+    applies — because size-1 page einsums degenerate to elementwise
+    code whose FMA contraction is fusion-context-dependent, which would
+    make "bitwise" ill-defined.
+    """
+    neg_inf = -1e30                      # layers.NEG_INF / paged.NEG_INF
+    b, h, hd = q.shape
+    _, page_size, kv_heads, _ = k_pages.shape
+    n_pages = ptab.shape[1]
+    if page_size == 1 and n_pages > 1:
+        tab = jnp.asarray(ptab, jnp.int32)
+        return paged_attention_decode(
+            q, k_pages[:, 0][tab], v_pages[:, 0][tab],
+            jnp.arange(b, dtype=jnp.int32)[:, None], kv_len, scale=scale)
+    g = h // kv_heads
+    scale = hd ** -0.5 if scale is None else scale
+    kv_len = jnp.asarray(kv_len, jnp.int32)
+    kpf = k_pages.astype(jnp.float32)
+    vpf = v_pages.astype(jnp.float32)
+
+    def row_fn(args):
+        q_row, tab_row, len_row = args
+        qg = q_row.astype(jnp.float32).reshape(kv_heads, g, hd) * scale
+
+        def logits(j):
+            s = jnp.einsum("kgd,pkd->kgp", qg, kpf[tab_row[j]],
+                           preferred_element_type=jnp.float32,
+                           precision=jax.lax.Precision.HIGHEST)
+            k_pos = j * page_size + jnp.arange(page_size)
+            return jnp.where((k_pos < len_row)[None, None, :], s, neg_inf)
+
+        def max_pass(m, j):
+            return jnp.maximum(m, jnp.max(logits(j), axis=-1)), None
+
+        m, _ = jax.lax.scan(
+            max_pass, jnp.full((kv_heads, g), neg_inf, jnp.float32),
+            jnp.arange(n_pages))
+
+        def contrib(j):
+            p = jnp.exp(logits(j) - m[..., None])
+            return jnp.sum(p, axis=-1), jnp.einsum(
+                "kgp,pkd->kgd", p, vpf[tab_row[j]],
+                preferred_element_type=jnp.float32,
+                precision=jax.lax.Precision.HIGHEST)
+
+        # materialize every page's (denominator, numerator) term first,
+        # then left-fold with pure adds in a separate scan.  Keeping the
+        # multiply out of the accumulation computation stops XLA from
+        # contracting `acc + p @ v` into an FMA when the page contraction
+        # degenerates to a broadcast multiply (page_size == 1) — the
+        # interpret-mode kernel evaluates op by op and never fuses, so an
+        # oracle-side FMA would break the bitwise contract by one ulp.
+        ls, accs = jax.lax.map(contrib, jnp.arange(n_pages))
+
+        def add_pass(carry, x):
+            l, acc = carry
+            dl, da = x
+            return (l + dl, acc + da), None
+
+        (l, acc), _ = jax.lax.scan(
+            add_pass,
+            (jnp.zeros((kv_heads, g), jnp.float32),
+             jnp.zeros((kv_heads, g, hd), jnp.float32)),
+            (ls, accs))
+        return acc / jnp.maximum(l, 1e-30)[..., None]
+
+    out = jax.lax.map(row_fn, (q, ptab, kv_len))
+    return out.reshape(b, h, hd).astype(q.dtype)
+
+
 def bitline_mvm(
     g: jax.Array,     # (K, N)
     x: jax.Array,     # (M, K) signed plane in {-1, 0, +1}

@@ -46,6 +46,7 @@ def attention_block(
     causal: bool = True,
     ctx: Optional[AnalogCtx] = None,
     aux: Optional[dict] = None,
+    paged: Optional[dict] = None,  # {"ptab", "page_size", "backend"}
 ) -> Tuple[jax.Array, Optional[dict]]:
     b, s, d = x.shape
     h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
@@ -67,6 +68,43 @@ def attention_block(
 
     q = rope(q, positions, cfg.rope_theta)
     k = rope(k, positions, cfg.rope_theta)
+
+    if paged is not None:
+        # paged decode: the cache is a global page pool (P, page, KV, hd)
+        # and each row's page list is a block table.  The fresh token is
+        # scattered into the row's current page; rows whose table entry
+        # is unallocated (conventionally 0) write into the sink page,
+        # whose contents are never reachable through any live row's
+        # ``kv_len`` mask.
+        if s != 1:
+            raise ValueError("paged attention is a decode path (S == 1); "
+                             "prefill goes through the dense cached path")
+        ps_ = paged["page_size"]
+        ptab = paged["ptab"]                              # (B, NP) int32
+        pos = jnp.asarray(cache_len, jnp.int32)           # (B,)
+        idx = jnp.clip(pos // ps_, 0, ptab.shape[1] - 1)
+        pid = jnp.take_along_axis(ptab, idx[:, None], axis=1)[:, 0]
+        off = pos % ps_
+        pk = cache["k"].at[pid, off].set(k[:, 0])
+        pv = cache["v"].at[pid, off].set(v[:, 0])
+        if paged.get("backend", "gather") == "pallas":
+            from repro.kernels.ops import paged_attention
+
+            out = paged_attention(q[:, 0], pk, pv, ptab, pos + 1)[:, None]
+        else:
+            # jnp gather oracle: materialize the row-ordered view and run
+            # the exact same streaming attention as the dense-slot decode
+            # — with NP*page == max_len the two lower to the same program,
+            # which is what pins the paged runtime bit-exact.
+            np_ = ptab.shape[1]
+            gk = pk[ptab].reshape(b, np_ * ps_, kv, hd)
+            gv = pv[ptab].reshape(b, np_ * ps_, kv, hd)
+            out = streaming_attention(
+                q, gk, gv, q_offset=pos, causal=causal, window=window,
+                kv_len=pos + 1,
+            )
+        out = out.reshape(b, s, h * hd)
+        return dense(out, p["wo"], "wo", ctx, aux), {"k": pk, "v": pv}
 
     if cache is None:
         if seq_par:

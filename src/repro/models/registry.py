@@ -26,6 +26,12 @@ class ModelApi:
     prefill_ragged: Optional[Callable] = None
     cache_slot_insert: Optional[Callable] = None
     cache_slot_evict: Optional[Callable] = None
+    # paged-KV serving (repro.serve.paged): global page pool, ragged
+    # suffix prefill over shared prefixes, block-table decode; None for
+    # families without a paged cache layout
+    init_page_pool: Optional[Callable] = None
+    prefill_cached: Optional[Callable] = None
+    decode_step_paged: Optional[Callable] = None
 
 
 _TRANSFORMER = ModelApi(
@@ -38,6 +44,9 @@ _TRANSFORMER = ModelApi(
     prefill_ragged=transformer.prefill_ragged,
     cache_slot_insert=transformer.cache_slot_insert,
     cache_slot_evict=transformer.cache_slot_evict,
+    init_page_pool=transformer.init_page_pool,
+    prefill_cached=transformer.prefill_cached,
+    decode_step_paged=transformer.decode_step_paged,
 )
 
 _HYBRID = ModelApi(

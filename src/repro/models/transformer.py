@@ -181,6 +181,7 @@ def _block(
     cache_l: Optional[dict],
     cache_len,
     actx: Optional[AnalogCtx],
+    paged: Optional[dict] = None,
 ) -> Tuple[jax.Array, Optional[dict], dict]:
     aux: Dict[str, jax.Array] = {}
     if cfg.rwkv:
@@ -204,7 +205,7 @@ def _block(
         p_l["attn"], norm(x, p_l["norm1"], cfg.norm), cfg,
         positions=positions, window=window,
         cache=cache_l["attn"] if cache_l is not None else None,
-        cache_len=cache_len, ctx=actx, aux=aux,
+        cache_len=cache_len, ctx=actx, aux=aux, paged=paged,
     )
     x = x + h
     h2_in = norm(x, p_l["norm2"], cfg.norm)
@@ -270,6 +271,7 @@ def _scan_layers(
     cache_len,
     pack: Optional[AnalogPack],
     remat: bool,
+    paged: Optional[dict] = None,
 ):
     windows = layer_windows(cfg)
     xs = {"p": params["layers"]}
@@ -290,6 +292,7 @@ def _scan_layers(
                 cfg, xs_l["p"], x,
                 positions=positions, window=window,
                 cache_l=xs_l.get("c"), cache_len=cache_len, actx=actx,
+                paged=paged,
             )
             return x, {"cache": new_cache, "aux": aux}
 
@@ -463,6 +466,113 @@ def prefill_ragged(
     last = jnp.take_along_axis(x, (true_lens - 1)[:, None, None], axis=1)
     logits = _head(cfg, cp, last, pack)
     return logits, {"layers": new_cache, "len": true_lens}
+
+
+def init_page_pool(cfg: ModelConfig, num_pages: int, page_size: int) -> dict:
+    """Global paged KV pool: ``num_pages`` fixed-size pages per layer.
+
+    Page 0 is the *sink* page by convention (``repro.serve.kvpool``
+    never hands it out): rows without a live allocation scatter their
+    decode K/V there, and no live row's block table ever references it,
+    so its garbage is unreachable through any ``kv_len`` mask.
+    """
+    if cfg.rwkv:
+        raise ValueError("paged KV applies to attention caches only; "
+                         "rwkv state is O(1) per slot already")
+    dtype = jnp.dtype(cfg.dtype)
+    kv, hd = cfg.n_kv_heads, cfg.hd
+    shape = (cfg.n_layers, num_pages, page_size, kv, hd)
+    return {"attn": {"k": jnp.zeros(shape, dtype),
+                     "v": jnp.zeros(shape, dtype)}}
+
+
+def prefill_cached(
+    cfg: ModelConfig,
+    params: dict,
+    tokens: jax.Array,                 # (B, S_bucket) right-padded suffixes
+    *,
+    true_lens: jax.Array,              # (B,) real suffix lengths
+    ctx_lens: jax.Array,               # (B,) valid prefix length per row
+    ctx_cache: dict,                   # {"k","v"}: (L, B, C, KV, hd)
+    pack: Optional[AnalogPack] = None,
+) -> Tuple[jax.Array, dict]:
+    """Ragged prefill of prompt *suffixes* over per-row cached prefixes.
+
+    The prefix-sharing path: each row already owns ``ctx_lens[b]`` valid
+    KV positions (gathered from the page pool by the caller) and only
+    the remaining suffix tokens run through the layers.  Every matmul
+    still routes through the ``AnalogPack`` exactly as a cold prefill
+    would — sharing skips recomputation, never the analog path.
+
+    Returns per-row logits at suffix position ``true_lens - 1`` (shape
+    (B, 1, V)) and a cache whose K/V hold the context in ``[0, C)`` plus
+    the suffix scattered at ``ctx_lens + [0, S)``; ``len`` is the total
+    fill ``ctx_lens + true_lens``.  Positions beyond a row's fill are
+    garbage exactly like ``prefill_ragged`` pads — unreachable through
+    the decode ``kv_len`` mask.
+    """
+    if cfg.rwkv:
+        raise ValueError("prefill_cached does not support the rwkv family")
+    b, s = tokens.shape
+    dtype = jnp.dtype(cfg.dtype)
+    cp = cast_params(params, dtype)
+    x = _embed(cfg, cp, tokens, None, dtype)
+    ctx_lens = jnp.asarray(ctx_lens, jnp.int32)
+    positions = ctx_lens[:, None] + jnp.arange(s)[None, :]
+    # seq capacity C + S so every row's scatter at ctx_lens + [0, S)
+    # stays in bounds (out-of-bounds scatter would clamp-corrupt)
+    padded = jax.tree.map(
+        lambda a: jnp.pad(a, ((0, 0), (0, 0), (0, s), (0, 0), (0, 0))),
+        ctx_cache)
+    x, new_cache, _ = _scan_layers(
+        cfg, cp, x, positions=positions, cache={"attn": padded},
+        cache_len=ctx_lens, pack=pack, remat=False,
+    )
+    true_lens = jnp.asarray(true_lens, jnp.int32)
+    last = jnp.take_along_axis(x, (true_lens - 1)[:, None, None], axis=1)
+    logits = _head(cfg, cp, last, pack)
+    return logits, {"layers": new_cache, "len": ctx_lens + true_lens}
+
+
+def decode_step_paged(
+    cfg: ModelConfig,
+    params: dict,
+    token: jax.Array,                  # (B, 1)
+    cache: dict,
+    *,
+    pack: Optional[AnalogPack] = None,
+    backend: str = "gather",
+) -> Tuple[jax.Array, dict]:
+    """One decode step over the paged KV pool.
+
+    ``cache`` is ``{"pool": init_page_pool(...), "ptab": (B, NP) int32,
+    "len": (B,) int32}`` — the block table and lengths are *traced*
+    data (the allocator changes them every step), the pool geometry is
+    static, so the step compiles once.  ``backend="gather"`` runs the
+    jnp gathered view through the same ``streaming_attention`` as the
+    dense-slot decode (the bit-exactness oracle); ``"pallas"`` runs the
+    in-kernel-gather flash-decode kernel (``kernels.ops.paged_attention``,
+    no sliding-window support).
+    """
+    if backend not in ("gather", "pallas"):
+        raise ValueError(f"unknown paged backend {backend!r}")
+    if backend == "pallas" and cfg.sliding_window is not None:
+        raise ValueError("the pallas paged-attention kernel has no "
+                         "sliding-window mask; use backend='gather'")
+    dtype = jnp.dtype(cfg.dtype)
+    cp = cast_params(params, dtype)
+    x = _embed(cfg, cp, token, None, dtype)
+    t = jnp.asarray(cache["len"], jnp.int32)
+    positions = t[:, None] + jnp.arange(1)[None, :]
+    page_size = cache["pool"]["attn"]["k"].shape[2]
+    x, new_pool, _ = _scan_layers(
+        cfg, cp, x, positions=positions, cache=cache["pool"], cache_len=t,
+        pack=pack, remat=False,
+        paged={"ptab": cache["ptab"], "page_size": page_size,
+               "backend": backend},
+    )
+    logits = _head(cfg, cp, x, pack)
+    return logits, {"pool": new_pool, "ptab": cache["ptab"], "len": t + 1}
 
 
 def cache_slot_insert(slot_cache: dict, new_cache: dict,

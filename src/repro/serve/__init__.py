@@ -1,7 +1,8 @@
 """Serve a trained LM analogly: program + calibrate (``analog_engine``),
 one-shot batched decode (``decode_lm``), the continuous-batching request
-runtime (``runtime``), and device-state management over time — drift,
-stuck-cell faults, recalibration, band reprogramming (``health``)."""
+runtime (``runtime``), its paged-KV + prefix-sharing variant (``paged``,
+``kvpool``), and device-state management over time — drift, stuck-cell
+faults, recalibration, band reprogramming (``health``)."""
 
 from repro.serve.analog_engine import (
     age_pack,
@@ -14,6 +15,8 @@ from repro.serve.analog_engine import (
     program_lm_from_codes,
 )
 from repro.serve.health import DriftClock, HealPolicy, PackManager
+from repro.serve.kvpool import PageAllocator, PagePoolExhausted, RadixCache
+from repro.serve.paged import PagedServeRuntime
 from repro.serve.runtime import (
     Completion,
     SamplerConfig,
@@ -35,6 +38,10 @@ __all__ = [
     "DriftClock",
     "HealPolicy",
     "PackManager",
+    "PageAllocator",
+    "PagePoolExhausted",
+    "PagedServeRuntime",
+    "RadixCache",
     "Completion",
     "SamplerConfig",
     "ServeRuntime",

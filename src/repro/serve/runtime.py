@@ -309,10 +309,9 @@ class ServeRuntime:
         """Drop all queued/active requests and zero the slot state.
         Compiled step functions are kept, so a reset server re-serves
         without recompilation (used by benchmark warmup)."""
-        cache0 = self._api.init_cache(self.cfg, self.max_slots, self.max_len)
         b = self.max_slots
         self._state = SlotState(
-            layers=cache0["layers"],
+            layers=self._init_layers(),
             length=jnp.zeros((b,), jnp.int32),
             tok=jnp.zeros((b,), jnp.int32),
             active=jnp.zeros((b,), bool),
@@ -323,6 +322,7 @@ class ServeRuntime:
         )
         self._queue: Deque[_Pending] = deque()
         self._slots: List[Optional[_Pending]] = [None] * b
+        self._early: List[Completion] = []
         self._live_uids: set = set()
         self._heal_queue: Deque[Any] = deque()
         self._last_health = 0
@@ -330,6 +330,13 @@ class ServeRuntime:
                        "occupancy_sum": 0, "tokens_out": 0, "ttft_s": [],
                        "heal_events": 0, "bands_reprogrammed": 0,
                        "recalibrations": 0, "probe_losses": []}
+
+    def _init_layers(self):
+        """The slot-batched cache tree this runtime decodes over.  Hook
+        for subclasses with a different KV layout (the paged runtime
+        swaps in a global page pool, ``repro.serve.paged``)."""
+        return self._api.init_cache(
+            self.cfg, self.max_slots, self.max_len)["layers"]
 
     @property
     def stats(self) -> Dict[str, Any]:
@@ -400,6 +407,7 @@ class ServeRuntime:
         """One scheduler iteration: maintain -> admit -> decode -> collect."""
         self._maintain()
         self._admit()
+        early, self._early = self._early, []
         # lanes past their budget (done_step <= t: retired at prefill, or
         # certainly finished) need collecting, not decoding — don't burn a
         # model step on them.  An EOS that fired early on a lane with
@@ -408,10 +416,16 @@ class ServeRuntime:
         t = self._stats["decode_steps"]
         live = sum(p is not None and p.done_step > t for p in self._slots)
         if live:
-            self._state = self._decode_fn(self._state, self.pack)
+            self._run_decode()
             self._stats["decode_steps"] += 1
             self._stats["occupancy_sum"] += live
-        return self._collect()
+        return early + self._collect()
+
+    def _run_decode(self) -> None:
+        """Dispatch one jitted decode step over the slot state.  Hook for
+        subclasses that thread extra traced operands through the step
+        (the paged runtime passes its block table)."""
+        self._state = self._decode_fn(self._state, self.pack)
 
     def _maintain(self) -> None:
         """Device-state upkeep between decode steps (no-op without a
@@ -467,24 +481,71 @@ class ServeRuntime:
                 self._stats["recalibrations"] += 1
 
     def _admit(self) -> None:
+        """Admit queued requests until slots or queue run dry.
+
+        Lanes that retire *at prefill* — a 1-token generation budget, or
+        an immediate EOS when stopping is on — release their slot (and,
+        in the paged runtime, their KV pages) right here, and the loop
+        re-admits into the freed capacity.  A bursty queue of short
+        requests therefore drains within one scheduler step instead of
+        each batch holding slots through a decode step it never needed.
+        """
+        while self._admit_batch():
+            if not self._queue:
+                return
+            t = self._stats["decode_steps"]
+            may_retire = any(p is not None and p.done_step <= t
+                             for p in self._slots)
+            # with EOS stopping on, a first-token EOS also retires a lane
+            # at prefill — that is device-side knowledge, so attempt a
+            # (syncing) collect whenever EOS is enabled
+            if not (may_retire or self._eos_enabled):
+                return
+            done = self._collect()
+            if not done:
+                return
+            self._early.extend(done)
+
+    def _admit_batch(self) -> bool:
+        """Admit one batch of requests into free slots; True if any."""
         free = [i for i, p in enumerate(self._slots) if p is None]
         if not free or not self._queue:
-            return
+            return False
         if self.gang and len(free) < self.max_slots:
-            return                      # static batching: wait for a full drain
-        take = [self._queue.popleft()
-                for _ in range(min(len(free), len(self._queue)))]
-        groups: Dict[int, List[Tuple[_Pending, int]]] = {}
+            return False                # static batching: wait for a full drain
+        take: List[_Pending] = []
+        while self._queue and len(take) < len(free):
+            if not self._reserve(self._queue[0]):
+                break                   # backpressure: keep FIFO order intact
+            take.append(self._queue.popleft())
+        if not take:
+            return False
+        groups: Dict[Tuple, List[Tuple[_Pending, int]]] = {}
         if self.gang:
             # one shared bucket: pad the whole batch to its longest prompt
             bucket = self._bucket_for(max(r.prompt.size for r in take))
-            groups[bucket] = [(r, free.pop(0)) for r in take]
+            groups[(bucket,)] = [(r, free.pop(0)) for r in take]
         else:
             for r in take:
-                groups.setdefault(self._bucket_for(r.prompt.size), []).append(
+                groups.setdefault(self._group_key(r), []).append(
                     (r, free.pop(0)))
-        for bucket, items in sorted(groups.items()):
-            self._prefill_group(bucket, items)
+        # ascending key order; the paged runtime relies on this (groups
+        # sort by cached-prefix length, so a prefix donor's prefill is
+        # dispatched before any same-batch borrower gathers its pages)
+        for key in sorted(groups):
+            self._prefill_group(key, groups[key])
+        return True
+
+    def _reserve(self, req: _Pending) -> bool:
+        """Claim admission resources for the queue head (hook).  False
+        leaves the request queued — the paged runtime returns False when
+        the page pool cannot hold the request right now."""
+        return True
+
+    def _group_key(self, req: _Pending) -> Tuple:
+        """Compile-group key for an admitted request; the last element
+        is always the padded prompt bucket."""
+        return (self._bucket_for(req.prompt.size),)
 
     def _bucket_for(self, n: int) -> int:
         for b in self.buckets:
@@ -492,8 +553,9 @@ class ServeRuntime:
                 return b
         raise AssertionError(n)         # unreachable: submit() validates
 
-    def _prefill_group(self, bucket: int,
+    def _prefill_group(self, key: Tuple,
                        items: List[Tuple[_Pending, int]]) -> None:
+        bucket = key[-1]
         g = min(_pow2_at_least(len(items)), self.max_slots)
         prompts = np.zeros((g, bucket), np.int32)
         true_lens = np.ones((g,), np.int32)
@@ -546,7 +608,7 @@ class ServeRuntime:
         done = []
         for i in finished:
             req = self._slots[i]
-            self._slots[i] = None
+            self._free_slot(i)
             self._live_uids.discard(str(req.uid))
             toks = out[i, :emitted[i]].astype(np.int32)
             self._stats["tokens_out"] += int(emitted[i])
@@ -555,20 +617,40 @@ class ServeRuntime:
                                    ttft_s=req.ttft_s))
         return done
 
+    def _free_slot(self, i: int) -> None:
+        """Return slot ``i`` to the free list (hook: the paged runtime
+        also releases the slot's page references and zeroes its
+        block-table row here)."""
+        self._slots[i] = None
+
     # -- jitted step bodies ------------------------------------------------
 
+    def _make_decode_model(self):
+        """The model half of the decode step: (state, pack, *extra) ->
+        (last-token logits, new cache layers, new lengths).  Hook — the
+        paged runtime swaps in ``decode_step_paged`` over the page pool;
+        the sampling/bookkeeping tail in ``_make_decode_fn`` is shared.
+        """
+        cfg, params, api = self.cfg, self.params, self._api
+
+        def model(state: SlotState, pack):
+            cache = {"layers": state.layers, "len": state.length}
+            logits, cache = api.decode_step(
+                cfg, params, state.tok[:, None], cache, pack=pack)
+            return logits[:, -1], cache["layers"], cache["len"]
+
+        return model
+
     def _make_decode_fn(self):
-        cfg, params = self.cfg, self.params
-        api, sampler, eos = self._api, self.sampler, self._eos
+        sampler, eos = self.sampler, self._eos
+        model = self._make_decode_model()
 
         # the pack is a traced ARGUMENT, not a closure: a healed/aged pack
         # (same treedef, new conductances) swaps in between decode steps
         # without recompiling the step
-        def decode(state: SlotState, pack) -> SlotState:
-            cache = {"layers": state.layers, "len": state.length}
-            logits, cache = api.decode_step(
-                cfg, params, state.tok[:, None], cache, pack=pack)
-            nxt, keys = sample_tokens(logits[:, -1], state.key, sampler)
+        def decode(state: SlotState, pack, *extra) -> SlotState:
+            logits, layers, length = model(state, pack, *extra)
+            nxt, keys = sample_tokens(logits, state.key, sampler)
             act = state.active
             cap = state.out.shape[1]
             hit = (jnp.arange(cap)[None, :] == state.emitted[:, None]) \
@@ -577,8 +659,8 @@ class ServeRuntime:
             emitted = state.emitted + act.astype(state.emitted.dtype)
             done = act & ((emitted >= state.max_new) | (nxt == eos))
             return SlotState(
-                layers=cache["layers"],
-                length=jnp.where(act, cache["len"], state.length),
+                layers=layers,
+                length=jnp.where(act, length, state.length),
                 tok=jnp.where(act, nxt, state.tok),
                 active=act & ~done,
                 emitted=emitted,

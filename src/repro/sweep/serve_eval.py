@@ -274,6 +274,61 @@ def runtime_agreement(
     return agree / max(total, 1)
 
 
+def paged_runtime_agreement(
+    cfg: ModelConfig,
+    params: dict,
+    requests: Sequence[Tuple[Any, int]],
+    *,
+    pack=None,
+    max_slots: int = 4,
+    max_len: Optional[int] = None,
+    page_size: int = 8,
+    num_pages: Optional[int] = None,
+    sampler=None,
+    seed: int = 0,
+    backend: str = "gather",
+) -> float:
+    """Token agreement between the paged and dense serving runtimes.
+
+    Every request is served twice at the same analog config and the
+    same sampler/seed: once through the dense-slot
+    :class:`repro.serve.ServeRuntime` (the differential oracle) and once
+    through :class:`repro.serve.PagedServeRuntime` (paged KV + prefix
+    sharing).  Returns the fraction of generated tokens that agree —
+    the contract value is 1.0 *bitwise*, greedy or seeded sampling: the
+    KV layout must never change what the model says (pinned by
+    ``tests/test_paged.py``, gated in ``benchmarks/servebench.py``).
+    ``max_len`` defaults to the tightest ``page_size`` multiple
+    covering the longest request.
+    """
+    from repro.serve.paged import PagedServeRuntime
+    from repro.serve.runtime import SamplerConfig, ServeRuntime
+
+    prompts = [np.asarray(p, np.int32).reshape(-1) for p, _ in requests]
+    n_new = [int(n) for _, n in requests]
+    if max_len is None:
+        need = max(p.size + n for p, n in zip(prompts, n_new))
+        max_len = -(-need // page_size) * page_size
+    sampler = SamplerConfig() if sampler is None else sampler
+    dense = ServeRuntime(cfg, params, pack=pack, max_slots=max_slots,
+                         max_len=max_len, sampler=sampler, seed=seed)
+    paged = PagedServeRuntime(cfg, params, pack=pack, max_slots=max_slots,
+                              max_len=max_len, page_size=page_size,
+                              num_pages=num_pages, sampler=sampler,
+                              seed=seed, backend=backend)
+    agree = total = 0
+    for rt in (dense, paged):
+        for i, (p, n) in enumerate(zip(prompts, n_new)):
+            rt.submit(p, max_new_tokens=n, uid=f"req-{i}")
+    ref, got = dense.run(), paged.run()
+    paged.check()
+    for uid, r in ref.items():
+        g = got[uid]
+        total += max(r.size, g.size)
+        agree += int(np.sum(r[:g.size] == g[:r.size]))
+    return agree / max(total, 1)
+
+
 def serve_serial_reference(
     cfg: ModelConfig,
     params: dict,

@@ -291,3 +291,93 @@ def test_analog_mvm_small_lane_shapes(n):
     np.testing.assert_allclose(
         ops.bitline_mvm(g, xs, 1e-4), bitline_currents(g, xs, 1e-4),
         rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# paged-attention decode: in-kernel block-table gather vs jnp gather oracle
+# ---------------------------------------------------------------------------
+
+# (B, H, KV, hd, page_size, NP) decode shapes: multi-page rows, ragged
+# last pages, GQA grouping, single-page tables, page_size=1 degenerate
+PAGED_SHAPES = [
+    (1, 2, 1, 8, 4, 2),
+    (3, 4, 2, 8, 4, 4),
+    (2, 4, 4, 16, 8, 2),
+    (4, 8, 2, 32, 8, 4),
+    (2, 2, 2, 8, 4, 1),      # single page
+    (3, 2, 1, 8, 1, 6),      # page_size = 1
+    (2, 6, 3, 8, 2, 5),
+]
+
+
+def _paged_case(b, h, kv, hd, ps, np_pages, seed=0):
+    """Random pool + per-row block tables with ragged fills (last page
+    partially valid) and sink-padded table tails."""
+    rng = np.random.default_rng(seed)
+    num_pages = 1 + b * np_pages
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(k1, (b, h, hd), jnp.float32)
+    k_pages = jax.random.normal(k2, (num_pages, ps, kv, hd), jnp.float32)
+    v_pages = jax.random.normal(k3, (num_pages, ps, kv, hd), jnp.float32)
+    perm = rng.permutation(np.arange(1, num_pages))
+    ptab = np.zeros((b, np_pages), np.int32)
+    kv_len = np.zeros((b,), np.int32)
+    for i in range(b):
+        n = int(rng.integers(1, np_pages * ps + 1))   # ragged fill
+        used = -(-n // ps)
+        ptab[i, :used] = perm[i * np_pages:i * np_pages + used]
+        kv_len[i] = n                                 # tail stays sink (0)
+    return q, k_pages, v_pages, jnp.asarray(ptab), jnp.asarray(kv_len)
+
+
+@pytest.mark.parametrize("b,h,kv,hd,ps,np_pages", PAGED_SHAPES)
+def test_paged_attention_bit_exact_vs_oracle(b, h, kv, hd, ps, np_pages):
+    """The two-phase kernel is BITWISE equal to the two-phase jnp
+    oracle — the exactness anchor of the paged serving runtime (see
+    kernels/paged.py on why one-pass online softmax cannot give this:
+    FMA contraction of the rescale differs across compilation
+    contexts)."""
+    args = _paged_case(b, h, kv, hd, ps, np_pages)
+    out = ops.paged_attention(*args)
+    want = ref.paged_attention_decode(*args)
+    assert out.dtype == want.dtype and out.shape == (b, h, hd)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+
+
+def test_paged_attention_invariant_to_table_tail_padding():
+    """Positions >= kv_len contribute exact zeros, so the result cannot
+    depend on what page ids pad the tail of the block table."""
+    q, kp, vp, ptab, kv_len = _paged_case(3, 4, 2, 8, 4, 4, seed=1)
+    base = np.asarray(ops.paged_attention(q, kp, vp, ptab, kv_len))
+    tab = np.asarray(ptab).copy()
+    for i, n in enumerate(np.asarray(kv_len)):
+        used = -(-int(n) // 4)
+        tab[i, used:] = (i + 5) % tab.shape[1] + 1     # garbage, non-sink
+    np.testing.assert_array_equal(
+        base, np.asarray(ops.paged_attention(q, kp, vp,
+                                             jnp.asarray(tab), kv_len)))
+
+
+def test_paged_attention_matches_streaming_gather():
+    """Numerical cross-check against the serving gather path: dense
+    streaming attention over pool[ptab] (the runtime's bit-exact
+    backend) agrees with the kernel to float tolerance."""
+    from repro.models.layers import streaming_attention
+
+    b, h, kv, hd, ps, npg = 3, 4, 2, 16, 4, 4
+    q, kp, vp, ptab, kv_len = _paged_case(b, h, kv, hd, ps, npg, seed=2)
+    out = np.asarray(ops.paged_attention(q, kp, vp, ptab, kv_len))
+    gk = kp[ptab].reshape(b, npg * ps, kv, hd)
+    gv = vp[ptab].reshape(b, npg * ps, kv, hd)
+    want = streaming_attention(q[:, None], gk, gv,
+                               q_offset=kv_len - 1, causal=True,
+                               kv_len=kv_len)[:, 0]
+    np.testing.assert_allclose(out, np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+def test_paged_attention_rejects_unpadded_pallas_page_size():
+    """Non-interpret mode requires sublane-aligned pages (positions
+    cannot be padded; a padded page would shift k_pos)."""
+    q, kp, vp, ptab, kv_len = _paged_case(2, 2, 1, 8, 4, 2)
+    with pytest.raises(ValueError, match="page_size"):
+        ops.paged_attention(q, kp, vp, ptab, kv_len, interpret=False)

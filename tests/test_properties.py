@@ -350,3 +350,166 @@ def test_energy_model_monotonicity():
     assert en.core_energy(dig, g_avg=0.02) > e_base
     # higher conductance costs more
     assert en.core_energy(base, g_avg=0.5) > e_base
+
+
+# ---------------------------------------------------------------------------
+# paged-KV bookkeeping: allocator + radix prefix cache (repro.serve.kvpool)
+# ---------------------------------------------------------------------------
+
+
+@st.composite
+def _alloc_ops(draw):
+    """A random alloc/retain/release program over a small pool."""
+    n_ops = draw(st.integers(1, 40))
+    return [
+        (draw(st.sampled_from(["alloc", "retain", "release"])),
+         draw(st.integers(0, 4)))
+        for _ in range(n_ops)
+    ]
+
+
+@given(num_pages=st.integers(2, 24), ops=_alloc_ops(),
+       seed=st.integers(0, 2 ** 16))
+@settings(**SETTINGS)
+def test_page_allocator_invariants(num_pages, ops, seed):
+    """Conservation, refcount correctness, no sink circulation, no page
+    handed out twice concurrently — against a shadow-model allocator."""
+    from repro.serve.kvpool import PageAllocator, PagePoolExhausted
+
+    rng = np.random.default_rng(seed)
+    a = PageAllocator(num_pages)
+    model = {}                              # page -> refcount
+    for op, n in ops:
+        live = sorted(model)
+        if op == "alloc":
+            try:
+                got = a.alloc(n)
+            except PagePoolExhausted:
+                assert n > (num_pages - 1) - len(model)
+            else:
+                assert len(got) == n == len(set(got))
+                assert not set(got) & set(model), "page aliased while live"
+                assert 0 not in got
+                for p in got:
+                    model[p] = 1
+        elif op == "retain" and live:
+            pick = [live[int(i)] for i in
+                    rng.integers(0, len(live), size=min(n, len(live)))]
+            a.retain(pick)
+            for p in pick:
+                model[p] += 1
+        elif op == "release" and live:
+            pick = [live[int(i)] for i in
+                    rng.integers(0, len(live), size=min(n, len(live)))]
+            # releasing the same page twice in one call is legal only
+            # while its refcount covers it; build a safe multiset
+            safe, budget = [], dict(model)
+            for p in pick:
+                if budget[p] > 0:
+                    safe.append(p)
+                    budget[p] -= 1
+            a.release(safe)
+            for p in safe:
+                model[p] -= 1
+                if not model[p]:
+                    del model[p]
+        a.check()
+        assert a.used_pages == len(model)
+        assert a.free_pages == (num_pages - 1) - len(model)
+        for p, r in model.items():
+            assert a.refcount(p) == r
+    # double free / foreign free always raises
+    dead = next((p for p in range(1, num_pages) if p not in model), None)
+    if dead is not None:
+        with pytest.raises(ValueError):
+            a.release([dead])
+
+
+@st.composite
+def _prompts(draw):
+    """Small-alphabet prompts so prefixes actually collide."""
+    n = draw(st.integers(1, 8))
+    return [draw(st.lists(st.integers(0, 3), min_size=1, max_size=12))
+            for _ in range(n)]
+
+
+@given(prompts=_prompts(), page_size=st.integers(1, 4),
+       queries=_prompts())
+@settings(**SETTINGS)
+def test_radix_match_equals_brute_force(prompts, page_size, queries):
+    """``RadixCache.match`` == the longest common whole-page-chunk
+    prefix over everything inserted, computed by brute force — and the
+    first inserter of a chunk owns its page forever (the bit-identical
+    content invariant)."""
+    from repro.serve.kvpool import PageAllocator, RadixCache, full_pages
+
+    a = PageAllocator(512)
+    r = RadixCache(a, page_size)
+    model = {}                              # chunk-path tuple -> page
+    for toks in prompts:
+        nfull = full_pages(len(toks), page_size)
+        pages = a.alloc(nfull)
+        r.insert(toks, pages)
+        for i in range(nfull):
+            path = tuple(toks[:(i + 1) * page_size])
+            model.setdefault(path, pages[i])
+        r.check()
+        a.check()
+    for q in prompts + queries:
+        expect = []
+        for i in range(len(q) // page_size):
+            page = model.get(tuple(q[:(i + 1) * page_size]))
+            if page is None:
+                break
+            expect.append(page)
+        assert r.match(q) == expect
+    # cached pages each hold exactly the cache's reference (+1 from the
+    # allocating caller, which never released here)
+    assert r.pages_cached == len(model)
+
+
+@given(prompts=_prompts(), page_size=st.integers(1, 3),
+       pool=st.integers(4, 16), seed=st.integers(0, 2 ** 16))
+@settings(**SETTINGS)
+def test_radix_evict_frees_without_breaking_holders(prompts, page_size,
+                                                    pool, seed):
+    """Eviction releases only the cache's own references: pages still
+    held by a 'slot' survive eviction, and the allocator never loses or
+    duplicates a page through any insert/evict/release interleaving."""
+    from repro.serve.kvpool import (PageAllocator, PagePoolExhausted,
+                                    RadixCache, full_pages)
+
+    rng = np.random.default_rng(seed)
+    a = PageAllocator(pool)
+    r = RadixCache(a, page_size)
+    held = []                                # our simulated slot's pages
+    for toks in prompts:
+        nfull = full_pages(len(toks), page_size)
+        shared = r.match(toks)[:nfull]
+        if shared:
+            a.retain(shared)
+        want = nfull - len(shared)
+        if want > a.free_pages:
+            r.evict(want)
+        try:
+            fresh = a.alloc(want)
+        except PagePoolExhausted:
+            if shared:
+                a.release(shared)
+            continue
+        pages = shared + fresh
+        r.insert(toks, pages)
+        if rng.integers(2):
+            held.extend(pages)               # slot keeps its references
+        else:
+            a.release(pages)                 # slot retires immediately
+        r.check()
+        a.check()
+    for p in held:                           # survivors are still live
+        assert a.refcount(p) >= 1
+    r.evict(pool)                            # unsatisfiable -> full drain
+    assert r.pages_cached == 0
+    r.check()
+    a.check()
+    a.release(held)                          # one reference per held entry
+    assert a.used_pages == 0 and a.free_pages == pool - 1
