@@ -219,3 +219,21 @@ class Timer:
 
 def emit(name: str, us: float, derived: str):
     print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+def surface_error(name: str, exc: BaseException) -> str:
+    """Benchmark catch blocks: full traceback to stderr, short repr back.
+
+    A bare ``repr(e)[:200]`` in the CSV ``derived`` column swallows the
+    stack of a deep JAX trace — the part that says *which* kernel shape
+    or sweep point died.  Callers do
+    ``emit(f"{name}_ERROR", 0.0, surface_error(name, e))``: the CSV row
+    stays one line, the stderr log carries the whole story.
+    """
+    import sys
+    import traceback
+
+    tb = "".join(traceback.format_exception(type(exc), exc,
+                                            exc.__traceback__))
+    print(f"# {name} FAILED\n{tb}", file=sys.stderr, flush=True)
+    return repr(exc)[:200]

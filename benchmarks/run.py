@@ -17,7 +17,9 @@ bits through ``repro.hw.Profile``, with the matched-loss claim gate),
 the serving runtime (``servebench`` — continuous vs static
 batching, with the runtime-vs-``decode_lm`` agreement gate), and the
 drift/fault aging story (``driftbench`` — the nu × device-age
-degradation surface plus the self-healing-vs-unhealed serving gate);
+degradation surface plus the self-healing-vs-unhealed serving gate),
+and the fused decode kernels (``kernelbench`` — fused-vs-oracle parity
+and the fused-vs-composed speedup gate on decode shapes);
 one programming trial per point, fresh (uncached) evaluation.
 """
 
@@ -45,7 +47,8 @@ MODULES = [
 ]
 
 SMOKE_MODULES = ["fig10_onoff", "fig19_parasitics", "lm_accuracy",
-                 "hetero_precision", "servebench", "driftbench"]
+                 "hetero_precision", "servebench", "driftbench",
+                 "kernelbench"]
 
 
 def main() -> None:
@@ -102,7 +105,7 @@ def main() -> None:
         try:
             mod.main(timer)
         except Exception as e:  # keep the harness running
-            emit(f"{mod_name}_ERROR", 0.0, repr(e)[:200])
+            emit(f"{mod_name}_ERROR", 0.0, common.surface_error(mod_name, e))
             failed.append(mod_name)
         print(f"# {mod_name} done in {time.time()-t0:.1f}s", file=sys.stderr)
 

@@ -19,7 +19,15 @@ raises, and ``benchmarks.run`` exits nonzero, when they fail):
     equal analog config;
   * runtime-vs-``decode_lm`` greedy token agreement == 1.0 — scheduling
     must never change what the model says
-    (``repro.sweep.serve_eval.runtime_agreement``).
+    (``repro.sweep.serve_eval.runtime_agreement``);
+  * fused decode chain token agreement == 1.0 (kernel-vs-oracle under
+    flash attention, fused-vs-composed greedy and seeded;
+    ``repro.sweep.serve_eval.fused_runtime_agreement``) and >= 1.3x over
+    the composed chain at steady-state full-occupancy decode, measured
+    at serving-scale width (``SCALE_D_MODEL``) where the analog MVM
+    chain dominates the step; the d_model=64 smoke LM Amdahl-dilutes
+    the chain to ~1.3x, so its ratio is emitted as an informative row
+    rather than gated.
 
 Both modes pay identical per-step costs (same compiled decode/prefill
 programs), so the speedup isolates the *scheduling* difference: static
@@ -38,7 +46,9 @@ from repro.core import analog as A
 from repro.core import errors as E
 from repro.serve import PagedServeRuntime, ServeRuntime, calibrate_lm, program_lm
 from repro.serve.runtime import SamplerConfig
-from repro.sweep.serve_eval import paged_runtime_agreement, runtime_agreement
+from repro.sweep.serve_eval import (
+    fused_runtime_agreement, pack_with_fused, paged_runtime_agreement,
+    runtime_agreement)
 
 from benchmarks.common import Timer, emit
 from benchmarks.lm_accuracy import CALIB_STEP, trained_lm
@@ -48,6 +58,14 @@ MAX_LEN = 80
 BUCKETS = (8, 16)
 #: long-tail generation budget — the static scheduler pads every gang to it
 TAIL_NEW = 64
+
+#: serving-scale width for the fused decode-step gate: at the smoke
+#: LM's d_model=64 the analog MVMs are a minority of the decode step
+#: (attention + sampling + slot bookkeeping dominate), so the fused
+#: ratio there sits at ~1.3x and inside container noise; at d_model=256
+#: the chain dominates and the ratio is ~3x with real margin.
+SCALE_D_MODEL = 256
+SCALE_D_FF = 384
 
 # paged-vs-dense comparison: equal KV *token* budget.  Dense KV capacity
 # is MAX_SLOTS * MAX_LEN = 640 token slots; the paged pool gets exactly
@@ -185,6 +203,67 @@ def bench_paged_pair(cfg, params, pack, reqs):
     return rows
 
 
+def decode_timer(cfg, params, pk, *, reps: int = 30):
+    """Bring a runtime to steady-state full occupancy (every slot live
+    on a long generation budget, admission queue empty) and return a
+    closure that times the raw jitted decode step — ``rt._decode_fn``
+    on frozen state, mean of ``reps`` calls with a sync at the end
+    (``step()`` dispatches asynchronously; timing it unsynced measures
+    enqueueing, not execution)."""
+    rng = np.random.default_rng(5)
+    rt = ServeRuntime(cfg, params, pack=pk, max_slots=MAX_SLOTS,
+                      max_len=MAX_LEN, buckets=BUCKETS)
+    for i in range(MAX_SLOTS):
+        prompt = rng.integers(0, cfg.vocab, size=6).astype(np.int32)
+        rt.submit(prompt, max_new_tokens=MAX_LEN - 8, uid=i)
+    for _ in range(4):                   # admit + warm
+        rt.step()
+    state, fn, pk2 = rt._state, rt._decode_fn, rt.pack
+    jax.block_until_ready(fn(state, pk2).tok)
+
+    def timed() -> float:
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            out = fn(state, pk2)
+        jax.block_until_ready(out.tok)
+        return (time.perf_counter() - t0) / reps * 1e6
+
+    return timed
+
+
+def fused_decode_ratio(cfg, params, pk, *, rounds: int = 5):
+    """(composed_us, fused_us) for the steady-state decode step: both
+    arms timed in interleaved rounds so slow host phases hit them
+    equally, min over rounds per arm (timing noise is one-sided)."""
+    tc = decode_timer(cfg, params, pk)
+    tf = decode_timer(cfg, params, pack_with_fused(pk, "oracle"))
+    cs, fs = [], []
+    for _ in range(rounds):
+        cs.append(tc())
+        fs.append(tf())
+    return min(cs), min(fs)
+
+
+def serving_scale_pack():
+    """The smoke-LM architecture widened to serving-scale MVM shapes,
+    programmed at the same analog design point.  Weights are random
+    init — the fused-vs-composed decode gate is throughput-only (token
+    agreement is gated on the trained LM above)."""
+    import dataclasses
+
+    from repro.configs import get_smoke_config
+    from repro.models.registry import get_model
+
+    cfg = dataclasses.replace(get_smoke_config("qwen1.5-4b"),
+                              d_model=SCALE_D_MODEL, d_ff=SCALE_D_FF)
+    params = get_model(cfg).init_params(cfg, jax.random.PRNGKey(0))
+    spec = A.design_a(error=E.state_proportional(0.02))
+    pack = program_lm(cfg, params, spec, jax.random.PRNGKey(7))
+    rng = np.random.default_rng(0)
+    calib = jax.numpy.asarray(rng.integers(0, cfg.vocab, size=(4, 16)))
+    return cfg, params, calibrate_lm(cfg, params, pack, calib)
+
+
 def main(timer: Timer):
     from benchmarks import common
 
@@ -248,6 +327,49 @@ def main(timer: Timer):
          f"paged-vs-dense agreement greedy={pg_greedy:.4f} "
          f"seeded={pg_seeded:.4f}")
 
+    # fused decode chain: the single-launch analog kernels (+ flash
+    # attention) must say exactly what the composed chain says, token
+    # for token — kernel-vs-oracle under flash, fused-vs-composed
+    # greedy AND seeded — and must buy decode throughput on the same
+    # heavy-tailed trace through the same scheduler.
+    agree_fused = [(p[:12], min(n, 8)) for p, n in reqs[:8]]
+    fz_kernel = fused_runtime_agreement(
+        cfg, params, agree_fused, pack=pack, max_slots=4, max_len=MAX_LEN)
+    fz_composed = fused_runtime_agreement(
+        cfg, params, agree_fused, pack=pack, max_slots=4, max_len=MAX_LEN,
+        modes=("kernel", "off"), attn=("stream", "stream"))
+    fz_seeded = fused_runtime_agreement(
+        cfg, params, agree_fused, pack=pack, max_slots=4, max_len=MAX_LEN,
+        modes=("kernel", "off"), attn=("stream", "stream"),
+        sampler=SamplerConfig(kind="top_k", temperature=0.8, top_k=16),
+        seed=11)
+    emit("servebench_fused_agreement", 0.0,
+         f"kernel-vs-oracle(flash)={fz_kernel:.4f} "
+         f"fused-vs-composed greedy={fz_composed:.4f} "
+         f"seeded={fz_seeded:.4f}")
+
+    # throughput: every analog site fused, timed through the jnp
+    # lowering (the Pallas kernel is parity- and agreement-gated above;
+    # interpret-mode wall-clock measures the emulator, not the launch
+    # structure) vs the composed chain in the same runtime.  The smoke
+    # LM row is informative (its 64-wide MVMs are a minority of the
+    # step); the gate runs at serving-scale width where the chain
+    # dominates.
+    us_c, us_f = fused_decode_ratio(cfg, params, pack)
+    emit("servebench_fused_decode_step", us_f,
+         f"composed_us={us_c:.1f} ratio={us_c / us_f:.2f}x "
+         f"slots={MAX_SLOTS} d_model={cfg.d_model} (informative)")
+    scfg, sparams, spack = serving_scale_pack()
+    sus_c, sus_f = fused_decode_ratio(scfg, sparams, spack)
+    fused_gain = sus_c / sus_f
+    emit("servebench_fused_decode_scale", sus_f,
+         f"composed_us={sus_c:.1f} decode_tok/s="
+         f"{MAX_SLOTS / sus_f * 1e6:.0f} vs {MAX_SLOTS / sus_c * 1e6:.0f} "
+         f"slots={MAX_SLOTS} d_model={scfg.d_model}")
+    emit("servebench_claim_fused_speedup", 0.0,
+         f"fused/composed decode-step ratio={fused_gain:.2f} at "
+         f"d_model={scfg.d_model} (>=1.3 required): {fused_gain >= 1.3}")
+
     if pg_greedy != 1.0 or pg_seeded != 1.0:
         raise RuntimeError(
             f"paged runtime diverged from the dense-slot oracle: "
@@ -265,3 +387,14 @@ def main(timer: Timer):
         raise RuntimeError(
             f"continuous batching speedup {speedup:.2f}x < 1.5x over "
             f"static batching (step ratio {step_ratio:.2f})")
+    if fz_kernel != 1.0 or fz_composed != 1.0 or fz_seeded != 1.0:
+        raise RuntimeError(
+            f"fused serving runtime diverged: kernel-vs-oracle "
+            f"{fz_kernel} / fused-vs-composed greedy {fz_composed} / "
+            f"seeded {fz_seeded} != 1.0")
+    if fused_gain < 1.3:
+        raise RuntimeError(
+            f"fused decode chain {fused_gain:.2f}x < 1.3x over the "
+            f"composed chain at steady-state full-occupancy decode, "
+            f"d_model={scfg.d_model} ({sus_f:.1f}us vs {sus_c:.1f}us "
+            f"per step)")

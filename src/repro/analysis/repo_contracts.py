@@ -17,6 +17,9 @@ one protects):
 * ``PagedServeRuntime``'s decode step compiles once across a trace with
   prefix hits and radix evictions (block tables traced, ``page_size``
   static), and each paged prefill group compiles exactly once;
+* serving through the fused decode kernels builds exactly one fused
+  program per distinct site-class signature
+  (``hw.fused_site_classes``), never one per site or per call;
 * values for fields declared traced flow through the traced row, never
   out of the template (a template value silently reused by every other
   axis point is the worst failure: wrong numbers, no crash).
@@ -299,6 +302,69 @@ def _paged_prefill_budget_contract() -> CompileContract:
     )
 
 
+def _fused_site_class_contract() -> CompileContract:
+    def run():
+        import jax
+        import numpy as np
+
+        from repro.configs import get_smoke_config
+        from repro.core.analog import design_a
+        from repro.core.errors import ErrorModel
+        from repro.hw import fused_site_classes
+        from repro.kernels import fused as kfused
+        from repro.models.registry import get_model
+        from repro.serve import ServeRuntime
+        from repro.serve.analog_engine import (
+            calibrate_lm,
+            lm_hook_names,
+            program_lm,
+        )
+        from repro.sweep.serve_eval import pack_with_fused
+
+        cfg = get_smoke_config("qwen1.5-4b")
+        params = get_model(cfg).init_params(
+            cfg, jax.random.PRNGKey(0))  # repro: ignore[prng-seed]
+        rng = np.random.default_rng(0)
+        calib = rng.integers(0, cfg.vocab, size=(2, 24)).astype(np.int32)
+        pack = program_lm(cfg, params, design_a(error=ErrorModel()),
+                          jax.random.PRNGKey(1))  # repro: ignore[prng-seed]
+        pack = calibrate_lm(cfg, params, pack, calib)
+        pack = pack_with_fused(pack, "kernel")
+        expected = set(fused_site_classes(
+            pack.profile, lm_hook_names(cfg), cfg.n_layers))
+        kfused.BUILD_SIGNATURES.clear()
+        rt = ServeRuntime(cfg, params, pack=pack, max_slots=3, max_len=32,
+                          attn_backend="flash")
+        for i in range(6):     # ragged trace over the fused serving stack
+            prompt = rng.integers(
+                0, cfg.vocab, size=int(rng.integers(3, 13))).astype(np.int32)
+            rt.submit(prompt, max_new_tokens=int(rng.integers(2, 7)), uid=i)
+        rt.run()
+        from repro.analysis.contracts import jit_cache_size
+
+        built = set(kfused.BUILD_SIGNATURES)
+        out = []
+        if built != expected:
+            out.append(
+                f"fused-kernel compile groups diverge from the profile's "
+                f"site classes: built {sorted(built)}, hw.fused_site_classes "
+                f"predicts {sorted(expected)}")
+        n = jit_cache_size(rt._decode_fn)
+        if n != 1:
+            out.append(f"fused decode step holds {n} compilations "
+                       f"(expected exactly 1)")
+        return out
+
+    return CompileContract(
+        name="serve/fused-compile-per-site-class",
+        description="serving through the fused kernels builds exactly one "
+                    "fused program per distinct site-class signature "
+                    "(hw.fused_site_classes), and the fused decode step "
+                    "still compiles once across a ragged trace",
+        run=run,
+    )
+
+
 def _traced_fields_contract() -> CompileContract:
     def run():
         import jax
@@ -342,6 +408,7 @@ def trace_contracts() -> List[CompileContract]:
         _decode_once_contract(),
         _paged_decode_once_contract(),
         _paged_prefill_budget_contract(),
+        _fused_site_class_contract(),
         _traced_fields_contract(),
     ]
 

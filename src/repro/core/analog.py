@@ -66,6 +66,7 @@ class AnalogSpec:
     max_rows: int = 1152
     r_hat: float = 0.0                # normalized parasitic resistance
     use_pallas: bool = False
+    fused: str = "off"                # "off" | "kernel" | "oracle"
     compute_dtype: jnp.dtype = jnp.float32
     drift: DriftModel = dataclasses.field(default_factory=DriftModel)
     fault: FaultModel = dataclasses.field(default_factory=FaultModel)
@@ -75,6 +76,10 @@ class AnalogSpec:
             raise ValueError(
                 f"AnalogSpec.input_accum must be 'analog' or 'digital', "
                 f"got {self.input_accum!r}")
+        if self.fused not in ("off", "kernel", "oracle"):
+            raise ValueError(
+                f"AnalogSpec.fused must be 'off', 'kernel' or 'oracle', "
+                f"got {self.fused!r}")
         if self.input_bits < 1:
             raise ValueError(
                 f"AnalogSpec.input_bits must be >= 1, got {self.input_bits}")
@@ -356,16 +361,58 @@ def _apply_line(
 
 
 def _maybe_pallas_fastpath(spec: AnalogSpec, collect: bool) -> bool:
-    """The fused kernels cover the paper's recommended design point —
-    ideal (``analog_mvm``) and parasitic (``analog_mvm_parasitic``) alike;
-    the caller dispatches on ``spec.parasitics_on``."""
+    """Kernel-eligibility predicate for the differential calibrated chain.
+
+    ``spec.fused != "off"`` selects the whole-chain fused serving kernels
+    (``kernels.fused``): slice/partition-tiled, ADC + dequant in-kernel,
+    both ``input_accum`` modes, and the Design-A parasitic variant (the
+    per-bit Thomas solve inside the same launch).  Digital input
+    accumulation under parasitics has no fused form — the parasitic
+    kernel's switched-capacitor bit fold *is* analog accumulation — so
+    that combination refuses here and falls back to the composed path,
+    as does calibration collection and any non-differential or
+    non-calibrated design.  Legacy ``use_pallas`` keeps its original,
+    narrower domain (unsliced Design-A epilogue outside the kernel).
+    """
+    if (
+        collect
+        or spec.mapping.scheme != "differential"
+        or spec.adc.style != "calibrated"
+    ):
+        return False
+    if spec.fused != "off":
+        return spec.input_accum == "analog" or not spec.parasitics_on
     return (
         spec.use_pallas
-        and not collect
-        and spec.mapping.scheme == "differential"
         and not spec.mapping.sliced
         and spec.input_accum == "analog"
-        and spec.adc.style == "calibrated"
+    )
+
+
+def fuse_signature(spec: AnalogSpec) -> Optional[Tuple]:
+    """The static compile identity of a spec's fused serving kernel.
+
+    Two fuse-eligible specs that agree on this tuple lower to the same
+    fused Pallas program (the traced operands — conductances, calibrated
+    ranges, scales, ``r_hat`` — carry everything else), so a profile
+    compiles one fused kernel per distinct signature, not per site
+    (``repro.hw.fused_site_classes``; pinned by the
+    ``serve/fused-compile-per-site-class`` contract).  ``None``
+    means the spec refuses to fuse (composed fallback).
+
+    Only never-traced program-structure fields may appear here:
+    mapping geometry (slice count / cell bits), ADC bit width, the
+    input-accumulation mode (bit fold vs single dot), and whether the
+    parasitic (Thomas-solve) kernel body is selected.
+    """
+    if spec.fused == "off" or not _maybe_pallas_fastpath(spec, False):
+        return None
+    m = spec.mapping
+    n_bits = None if spec.input_accum == "analog" else spec.n_planes
+    return (
+        "parasitic" if spec.parasitics_on else "linear",
+        m.n_slices, m.cell_bits, spec.adc.bits, n_bits,
+        spec.n_planes if spec.parasitics_on else None,
     )
 
 
@@ -411,6 +458,33 @@ def analog_matmul(
 
     if _maybe_pallas_fastpath(spec, collect) and adc_lo is not None:
         from repro.kernels import ops as kops
+
+        if spec.fused != "off":
+            # Whole-chain fused kernels: ADC epilogue, dequant and slice
+            # accumulation inside the launch; one traced scale operand so
+            # the sweep engine batches traced on_off_ratio (hence traced
+            # gain) points through a single compilation.
+            backend = "oracle" if spec.fused == "oracle" else "kernel"
+            scale = gain * aw.w_scale * xq.scale
+            if spec.parasitics_on:
+                y = kops.fused_mvm_parasitic(
+                    x_parts,
+                    aw.g_pos[:, :, :, : aw.n], aw.g_neg[:, :, :, : aw.n],
+                    r_hat=spec.r_hat, adc_lo=adc_lo, adc_hi=adc_hi,
+                    adc_bits=spec.adc.bits, cell_bits=m.cell_bits,
+                    n_bits=spec.n_planes, scale=scale, backend=backend,
+                )
+            else:
+                n_bits = (None if spec.input_accum == "analog"
+                          else spec.n_planes)
+                y = kops.fused_mvm(
+                    x_parts,
+                    aw.g_pos[:, :, :, : aw.n], aw.g_neg[:, :, :, : aw.n],
+                    adc_lo=adc_lo, adc_hi=adc_hi,
+                    adc_bits=spec.adc.bits, cell_bits=m.cell_bits,
+                    n_bits=n_bits, scale=scale, backend=backend,
+                )
+            return y.reshape(*lead, aw.n)
 
         if spec.parasitics_on:
             d_codes = kops.analog_mvm_parasitic(
@@ -531,6 +605,6 @@ def ideal_matmul_int(x: jax.Array, aw: AnalogWeights, spec: AnalogSpec,
     (no errors, no ADC).  Used for SNR measurements (Eq. 9/10)."""
     err_free = dataclasses.replace(
         spec, error=ErrorModel(), adc=adc_lib.ADCConfig(style="none"),
-        r_hat=0.0, use_pallas=False,
+        r_hat=0.0, use_pallas=False, fused="off",
     )
     return analog_matmul(x, aw, err_free, act_hi=act_hi)

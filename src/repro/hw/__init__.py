@@ -26,6 +26,7 @@ from repro.hw.profile import (
     SiteSpecs,
     as_profile,
     check_band_geometry,
+    fused_site_classes,
     geometry_key,
     site_class,
 )
@@ -40,6 +41,7 @@ __all__ = [
     "SiteSpecs",
     "as_profile",
     "check_band_geometry",
+    "fused_site_classes",
     "geometry_key",
     "site_class",
 ]

@@ -351,6 +351,38 @@ def geometry_key(spec: AnalogSpec) -> Tuple:
             spec.max_rows, str(spec.compute_dtype))
 
 
+def fused_site_classes(
+    profile: Profile,
+    sites: Sequence[str],
+    n_layers: int,
+) -> "dict[Tuple, List[str]]":
+    """Group a profile's analog sites by fused-kernel compile identity.
+
+    Keys are :func:`repro.core.analog.fuse_signature` tuples — the static
+    program identity of the fused serving kernel — and values the sorted
+    site names that share it.  Sites resolving digital everywhere, or to
+    specs that refuse to fuse (``fused == "off"``, digital-accum
+    parasitics, uncalibrated ADC, ...), never appear: they take the
+    digital or composed path and own no fused compile group.  The
+    ``serve/fused-one-compile-per-site-class`` contract pins the served
+    model's fused-kernel compile count to ``len()`` of this mapping.
+    """
+    from repro.core.analog import fuse_signature
+
+    groups: "dict[Tuple, List[str]]" = {}
+    for site in sites:
+        sigs = set()
+        for lo, _hi in profile.layer_bands((site,), n_layers):
+            spec = profile.resolve(site, lo)
+            if isinstance(spec, AnalogSpec):
+                sig = fuse_signature(spec)
+                if sig is not None:
+                    sigs.add(sig)
+        for sig in sigs:
+            groups.setdefault(sig, []).append(site)
+    return {sig: sorted(names) for sig, names in sorted(groups.items())}
+
+
 def check_band_geometry(site: str, specs: Sequence[AnalogSpec]) -> None:
     """Raise if a site's per-band specs disagree on array geometry."""
     keys = {geometry_key(s) for s in specs}

@@ -46,7 +46,16 @@ from repro.kernels.compat import COMPILER_PARAMS
 def _thomas_bottom_current(plane, g, r, *, k: int):
     """Bottom-node current (bm, bn) of one signed plane through one line
     stack: Thomas forward sweep over rows; d'_{K-1} IS v_{K-1} since
-    c_{K-1} = 0 in back-substitution, and I = v_{K-1} / r."""
+    c_{K-1} = 0 in back-substitution, and I = v_{K-1} / r.
+
+    ``g_i * r`` is factored out so that every product feeding an add
+    (``gr``, ``rhs``) has an exactly-representable value — ``a_i`` is in
+    {0, 1} and ``x_i`` in {-1, 0, +1} — making the sweep FMA-invariant:
+    whether LLVM contracts ``a*b + c`` into an FMA or not, the bits come
+    out the same.  That is what lets the fused parasitic kernel
+    (``kernels.fused``) be pinned bitwise against a jnp oracle calling
+    this very function under a different compilation context.
+    """
     a = jnp.abs(plane)
     bm = plane.shape[0]
     bn = g.shape[1]
@@ -56,8 +65,9 @@ def _thomas_bottom_current(plane, g, r, *, k: int):
         g_i = jax.lax.dynamic_slice(g, (i, 0), (1, bn))      # (1, bn)
         x_i = jax.lax.dynamic_slice(plane, (0, i), (bm, 1))  # (bm, 1)
         a_i = jax.lax.dynamic_slice(a, (0, i), (bm, 1))
-        gr = a_i * g_i * r                            # (bm, bn)
-        rhs = x_i * g_i * r
+        grr = g_i * r                                 # (1, bn)
+        gr = a_i * grr                                # (bm, bn) exact
+        rhs = x_i * grr                               # (bm, bn) exact
         base = jnp.where(i == 0, 1.0, 2.0)
         denom = base + gr + c_prev
         c_new = -1.0 / denom

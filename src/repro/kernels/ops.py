@@ -15,7 +15,9 @@ import jax.numpy as jnp
 
 from repro.kernels import analog_mvm as _k_mvm
 from repro.kernels import bitline as _k_bl
+from repro.kernels import fused as _k_fused
 from repro.kernels import paged as _k_paged
+from repro.kernels import ref as _k_ref
 
 
 def _use_interpret() -> bool:
@@ -39,15 +41,23 @@ def _pick_tile(size: int, pref: int, *, lane: bool = False) -> int:
     Mosaic requires lane tiles of 128, so small N pads up to one full
     tile rather than shrinking it (interpret mode tolerates any tile,
     which is exactly how a sublane-rounded N tile stayed latent until
-    TPU compilation).  Sublane (M) dimensions may shrink to a multiple
-    of 8 to cap padding waste on small inputs.
+    TPU compilation).  Sublane (M) dimensions may shrink to cap padding
+    waste on small inputs — but only to a *power-of-two multiple of 8*
+    (8, 16, 32, 64, ...): an M that is already a multiple of 8 used to be
+    taken verbatim as the tile, and odd multiples of 8 (24, 40, 56, ...)
+    are the fragile Mosaic relayout class that small-N tiles fell into
+    before PR 3 pinned the lane rule.  Rounding to the next power-of-two
+    multiple keeps padding waste under 2x and every tile in the
+    well-trodden {8, 16, 32, 64, 128} set.
     """
     if lane:
         return pref
     if size >= pref:
         return pref
-    # round size up to the next multiple of 8 (sublane) as the tile
-    return max(8, int(-(-size // 8) * 8))
+    tile = 8
+    while tile < size:
+        tile *= 2
+    return min(tile, pref)
 
 
 def analog_mvm(
@@ -170,6 +180,152 @@ def paged_attention(
         jnp.asarray(ptab, jnp.int32), jnp.asarray(kv_len, jnp.int32),
         scale=float(scale), interpret=interpret,
     )
+    return out[:, :, :hd].astype(q.dtype)
+
+
+def fused_mvm(
+    x_parts: jax.Array,      # (M, P, rows) integer-valued signed
+    g_pos: jax.Array,        # (S, P, rows, N)
+    g_neg: jax.Array,        # (S, P, rows, N)
+    *,
+    adc_lo: jax.Array,       # (S,) per-slice calibrated range
+    adc_hi: jax.Array,
+    adc_bits: int,
+    cell_bits: int,
+    n_bits,                  # None = analog input accumulation
+    scale,                   # traced scalar: gain * w_scale * x_scale
+    backend: str = "kernel",
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Fused analog MVM chain (matmul + ADC + dequant + slice/bit
+    shift-and-add in one launch); returns the dequantized (M, N).
+
+    ``backend="kernel"`` runs the Pallas kernel (interpret mode off-TPU),
+    ``"oracle"`` the bitwise-identical jnp mirror (``kernels.ref``) —
+    the composed multi-op form of the same chain, which is what the
+    fused serving runtime is agreement-gated against end to end.
+    """
+    if backend not in ("kernel", "oracle"):
+        raise ValueError(f"unknown fused_mvm backend {backend!r}")
+    interpret = _use_interpret() if interpret is None else interpret
+    m, p, rows = x_parts.shape
+    n = g_pos.shape[-1]
+    bm = _pick_tile(m, 128)
+    bn = _pick_tile(n, 128, lane=True)
+    xp = _pad_to(x_parts.astype(jnp.float32), 0, bm)
+    gp = _pad_to(g_pos.astype(jnp.float32), 3, bn)
+    gm = _pad_to(g_neg.astype(jnp.float32), 3, bn)
+    if backend == "oracle":
+        out = _k_ref.fused_mvm_diff(
+            xp, gp, gm, adc_lo, adc_hi, scale,
+            adc_bits=adc_bits, cell_bits=cell_bits, n_bits=n_bits,
+            bm=bm, bn=bn,
+        )
+    else:
+        out = _k_fused.fused_mvm_pallas(
+            xp, gp, gm, adc_lo, adc_hi, scale,
+            adc_bits=adc_bits, cell_bits=cell_bits, n_bits=n_bits,
+            bm=bm, bn=bn, interpret=interpret,
+        )
+    return out[:m, :n]
+
+
+def fused_mvm_parasitic(
+    x_parts: jax.Array,      # (M, P, rows) integer-valued signed
+    g_pos: jax.Array,        # (S, P, rows, N)
+    g_neg: jax.Array,        # (S, P, rows, N)
+    *,
+    r_hat,                   # scalar parasitic level (traced or concrete)
+    adc_lo: jax.Array,       # (S,)
+    adc_hi: jax.Array,
+    adc_bits: int,
+    cell_bits: int,
+    n_bits: int,
+    scale,                   # traced scalar: gain * w_scale * x_scale
+    backend: str = "kernel",
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Fused parasitic analog MVM chain (per-bit Thomas solve + analog
+    bit accumulation + ADC + dequant in one launch); dequantized (M, N)."""
+    if backend not in ("kernel", "oracle"):
+        raise ValueError(f"unknown fused_mvm_parasitic backend {backend!r}")
+    interpret = _use_interpret() if interpret is None else interpret
+    m, p, rows = x_parts.shape
+    n = g_pos.shape[-1]
+    bm = _pick_tile(m, 128)
+    bn = _pick_tile(n, 128, lane=True)
+    xp = _pad_to(x_parts.astype(jnp.float32), 0, bm)
+    gp = _pad_to(g_pos.astype(jnp.float32), 3, bn)
+    gm = _pad_to(g_neg.astype(jnp.float32), 3, bn)
+    if backend == "oracle":
+        out = _k_ref.fused_mvm_parasitic(
+            xp, gp, gm, r_hat, adc_lo, adc_hi, scale,
+            adc_bits=adc_bits, cell_bits=cell_bits, n_bits=n_bits,
+            bm=bm, bn=bn,
+        )
+    else:
+        out = _k_fused.fused_mvm_parasitic_pallas(
+            xp, gp, gm, r_hat, adc_lo, adc_hi, scale,
+            adc_bits=adc_bits, cell_bits=cell_bits, n_bits=n_bits,
+            bm=bm, bn=bn, interpret=interpret,
+        )
+    return out[:m, :n]
+
+
+def flash_attention_decode(
+    q: jax.Array,          # (B, H, hd)
+    k: jax.Array,          # (B, S, KV, hd) dense per-slot cache
+    v: jax.Array,          # (B, S, KV, hd)
+    kv_len: jax.Array,     # (B,) int32 valid positions per row
+    *,
+    block: int = 8,
+    scale: float | None = None,
+    backend: str = "kernel",
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Flash-decode attention over the *dense* per-slot KV cache; returns
+    (B, H, hd).  The dense sibling of :func:`paged_attention`: chunks are
+    addressed arithmetically as (row, j) blocks — no block table, no
+    gather — and per-row fills arrive by scalar prefetch, so positions at
+    or beyond ``kv_len[b]`` contribute exact zeros.
+
+    ``backend="oracle"`` runs the bitwise-identical jnp mirror (the
+    chunked cache viewed as a paged pool with an arange table).  The
+    cache length is zero-padded to a ``block`` multiple — exact, the pad
+    sits at positions >= ``kv_len`` behind the mask.  TPU alignment pads
+    the head dim (lane) to 128 with zeros, sliced away on return;
+    ``block`` must stay sublane-aligned (multiple of 8) when compiled.
+    """
+    if backend not in ("kernel", "oracle"):
+        raise ValueError(f"unknown flash_attention_decode backend "
+                         f"{backend!r}")
+    interpret = _use_interpret() if interpret is None else interpret
+    b, h, hd = q.shape
+    scale = hd ** -0.5 if scale is None else scale
+    if not interpret and block % 8:
+        raise ValueError(
+            f"block={block} must be a multiple of 8 (sublane) for the "
+            "compiled TPU kernel")
+    kp = _pad_to(k, 1, block)
+    vp = _pad_to(v, 1, block)
+    qp = q
+    if not interpret:
+        qp = _pad_to(qp, 2, 128)
+        kp = _pad_to(kp, 3, 128)
+        vp = _pad_to(vp, 3, 128)
+    kv_len = jnp.asarray(kv_len, jnp.int32)
+    if backend == "oracle":
+        out = _k_ref.flash_attention_decode(
+            qp.astype(jnp.float32), kp.astype(jnp.float32),
+            vp.astype(jnp.float32), kv_len,
+            block=block, scale=float(scale),
+        )
+    else:
+        out = _k_fused.flash_attention_pallas(
+            qp.astype(jnp.float32), kp.astype(jnp.float32),
+            vp.astype(jnp.float32), kv_len,
+            block=block, scale=float(scale), interpret=interpret,
+        )
     return out[:, :, :hd].astype(q.dtype)
 
 

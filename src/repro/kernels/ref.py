@@ -176,6 +176,184 @@ def bitline_mvm(
     return bitline_currents(g, x, r_hat)
 
 
+def fused_mvm_diff(
+    x_parts: jax.Array,   # (M, P, rows) integer-valued, padded to bm
+    g_pos: jax.Array,     # (S, P, rows, N) padded to bn
+    g_neg: jax.Array,     # (S, P, rows, N)
+    adc_lo,               # (S,) per-slice calibrated range
+    adc_hi,
+    scale,                # scalar: gain * w_scale * x_scale
+    *,
+    adc_bits: int,
+    cell_bits: int,
+    n_bits,               # None = analog input accumulation
+    bm: int,
+    bn: int,
+) -> jax.Array:
+    """Oracle for ``fused.fused_mvm_pallas`` — the composed chain as plain
+    jnp ops, walked in the kernel's exact tile order.
+
+    Bitwise equality with the kernel rests on two things (see
+    ``kernels.fused``): every dot is taken over the *identical*
+    (bm, rows) x (rows, bn) operand tiles in the identical (i, j, p, s, b)
+    order — same ``dot_general``, same reduction, same accumulation-add
+    sequence — and every value feeding an accumulation add is produced by
+    an add or an exact power-of-two multiply (the shared code-unit
+    ``fused_adc_code_units`` epilogue), so FMA contraction cannot
+    introduce a rounding difference between the two compilation contexts.
+    The tile loops are static Python loops: tile counts on serving shapes
+    are single digits.
+    """
+    from repro.kernels.analog_mvm import _bit_plane
+    from repro.kernels.fused import (adc_lsb, fused_adc_code_units,
+                                     term_weight)
+
+    m, p, rows = x_parts.shape
+    n_slices, _, _, n = g_pos.shape
+    if m % bm or n % bn:
+        raise ValueError(
+            f"block shape ({bm}, {bn}) does not tile operand ({m}, {n})")
+    scale = jnp.asarray(scale, jnp.float32).reshape(())
+    lo = jnp.asarray(adc_lo, jnp.float32).reshape(n_slices)
+    hi = jnp.asarray(adc_hi, jnp.float32).reshape(n_slices)
+    bits = (None,) if n_bits is None else tuple(range(n_bits))
+    out_scale = scale
+    if n_slices == 1:
+        out_scale = scale * adc_lsb(lo[0], hi[0], adc_bits)
+
+    out_rows = []
+    for i in range(m // bm):
+        row_tiles = []
+        for j in range(n // bn):
+            tot = jnp.zeros((bm, bn), jnp.float32)
+            for pi in range(p):
+                x = x_parts[i * bm:(i + 1) * bm, pi, :]
+                if n_bits is not None:
+                    sign = jnp.sign(x)
+                    mag = jnp.abs(x)
+                acc = jnp.zeros((bm, bn), jnp.float32)
+                for s in range(n_slices):
+                    g = (g_pos[s, pi, :, j * bn:(j + 1) * bn]
+                         - g_neg[s, pi, :, j * bn:(j + 1) * bn])
+                    lsb = adc_lsb(lo[s], hi[s], adc_bits)
+                    a_s = jnp.zeros((bm, bn), jnp.float32)
+                    for b in bits:
+                        plane = x if b is None else _bit_plane(mag, sign, b)
+                        v = jnp.dot(plane, g,
+                                    preferred_element_type=jnp.float32,
+                                    precision=jax.lax.Precision.HIGHEST)
+                        q = fused_adc_code_units(v, lo[s], lsb, adc_bits)
+                        a_s = a_s + q * term_weight(0, 0, b)
+                    if n_slices == 1:
+                        acc = a_s
+                    else:
+                        acc = acc + (a_s * lsb) * term_weight(
+                            cell_bits, s, None)
+                tot = tot + acc
+            row_tiles.append(tot * out_scale)
+        out_rows.append(jnp.concatenate(row_tiles, axis=1))
+    return jnp.concatenate(out_rows, axis=0)
+
+
+def fused_mvm_parasitic(
+    x_parts: jax.Array,   # (M, P, rows) integer-valued, padded to bm
+    g_pos: jax.Array,     # (S, P, rows, N) padded to bn
+    g_neg: jax.Array,     # (S, P, rows, N)
+    r_hat,
+    adc_lo,               # (S,)
+    adc_hi,
+    scale,                # scalar: gain * w_scale * x_scale
+    *,
+    adc_bits: int,
+    cell_bits: int,
+    n_bits: int,
+    bm: int,
+    bn: int,
+) -> jax.Array:
+    """Oracle for ``fused.fused_mvm_parasitic_pallas``: the same Thomas
+    forward sweep (``bitline._thomas_bottom_current`` — shared, so the
+    recurrence cannot diverge) over the kernel's exact operand tiles,
+    analog bit accumulation, per-slice ADC, shift-and-add, one dequant."""
+    from repro.kernels.analog_mvm import _bit_plane
+    from repro.kernels.bitline import _thomas_bottom_current
+    from repro.kernels.fused import (adc_lsb, fused_adc_code_units,
+                                     term_weight)
+
+    m, p, rows = x_parts.shape
+    n_slices, _, _, n = g_pos.shape
+    if m % bm or n % bn:
+        raise ValueError(
+            f"block shape ({bm}, {bn}) does not tile operand ({m}, {n})")
+    scale = jnp.asarray(scale, jnp.float32).reshape(())
+    r = jnp.asarray(r_hat, jnp.float32).reshape(())
+    lo = jnp.asarray(adc_lo, jnp.float32).reshape(n_slices)
+    hi = jnp.asarray(adc_hi, jnp.float32).reshape(n_slices)
+    out_scale = scale
+    if n_slices == 1:
+        out_scale = scale * adc_lsb(lo[0], hi[0], adc_bits)
+
+    out_rows = []
+    for i in range(m // bm):
+        row_tiles = []
+        for j in range(n // bn):
+            tot = jnp.zeros((bm, bn), jnp.float32)
+            for pi in range(p):
+                x = x_parts[i * bm:(i + 1) * bm, pi, :]
+                sign = jnp.sign(x)
+                mag = jnp.abs(x)
+                acc = jnp.zeros((bm, bn), jnp.float32)
+                for s in range(n_slices):
+                    gp = g_pos[s, pi, :, j * bn:(j + 1) * bn]
+                    gm = g_neg[s, pi, :, j * bn:(j + 1) * bn]
+                    accb = jnp.zeros((bm, bn), jnp.float32)
+                    for b in range(n_bits):
+                        plane = _bit_plane(mag, sign, b)
+                        i_pos = _thomas_bottom_current(plane, gp, r, k=rows)
+                        i_neg = _thomas_bottom_current(plane, gm, r, k=rows)
+                        accb = accb + (i_pos - i_neg) * 2.0 ** b
+                    lsb = adc_lsb(lo[s], hi[s], adc_bits)
+                    a_s = fused_adc_code_units(accb, lo[s], lsb, adc_bits)
+                    if n_slices == 1:
+                        acc = a_s
+                    else:
+                        acc = acc + (a_s * lsb) * term_weight(
+                            cell_bits, s, None)
+                tot = tot + acc
+            row_tiles.append(tot * out_scale)
+        out_rows.append(jnp.concatenate(row_tiles, axis=1))
+    return jnp.concatenate(out_rows, axis=0)
+
+
+def flash_attention_decode(
+    q: jax.Array,          # (B, H, hd)
+    k: jax.Array,          # (B, S, KV, hd) dense per-slot cache
+    v: jax.Array,          # (B, S, KV, hd)
+    kv_len: jax.Array,     # (B,) int32 valid positions per row
+    *,
+    block: int,
+    scale=None,
+) -> jax.Array:
+    """Oracle for ``fused.flash_attention_pallas``.
+
+    A dense per-slot cache chunked into ``block``-sized pieces *is* a
+    paged pool whose block table is ``row * n_blocks + j`` — the chunk at
+    (b, j) and the page at table entry (b, j) are the same (block, KV,
+    hd) array, and the kernels walk them with identical contractions,
+    masks, and phase order.  Delegating to ``paged_attention_decode``
+    therefore reuses its proven bitwise form verbatim.
+    """
+    b, seq, kv_heads, hd = k.shape
+    if seq % block:
+        raise ValueError(f"cache length {seq} not divisible by "
+                         f"block {block}")
+    n_blocks = seq // block
+    kp = k.reshape(b * n_blocks, block, kv_heads, hd)
+    vp = v.reshape(b * n_blocks, block, kv_heads, hd)
+    tab = (jnp.arange(b, dtype=jnp.int32)[:, None] * n_blocks
+           + jnp.arange(n_blocks, dtype=jnp.int32)[None, :])
+    return paged_attention_decode(q, kp, vp, tab, kv_len, scale=scale)
+
+
 def analog_mvm_parasitic_diff(
     x_parts: jax.Array,   # (M, P, rows) integer-valued, signed
     g_pos: jax.Array,     # (P, rows, N)

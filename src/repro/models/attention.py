@@ -47,6 +47,7 @@ def attention_block(
     ctx: Optional[AnalogCtx] = None,
     aux: Optional[dict] = None,
     paged: Optional[dict] = None,  # {"ptab", "page_size", "backend"}
+    attn_backend: str = "stream",  # dense decode: stream | flash | flash_oracle
 ) -> Tuple[jax.Array, Optional[dict]]:
     b, s, d = x.shape
     h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
@@ -133,10 +134,26 @@ def attention_block(
                                                      cache_len, 1)
             cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v,
                                                      cache_len, 1)
-        out = streaming_attention(
-            q, ck, cv, q_offset=cache_len, causal=causal, window=window,
-            kv_len=cache_len + s,
-        )
+        if attn_backend != "stream":
+            # flash-decode Pallas kernel over the dense per-slot cache
+            # (the dense sibling of the paged in-kernel-gather path).
+            # Like that kernel it has no sliding-window mask; the caller
+            # (decode_step) rejects windowed configs up front.
+            if s != 1:
+                raise ValueError("flash attention is a decode path "
+                                 "(S == 1); prefill uses streaming")
+            from repro.kernels.ops import flash_attention_decode
+
+            fills = jnp.broadcast_to(
+                jnp.asarray(cache_len + s, jnp.int32), (b,))
+            be = "oracle" if attn_backend == "flash_oracle" else "kernel"
+            out = flash_attention_decode(
+                q[:, 0], ck, cv, fills, backend=be)[:, None]
+        else:
+            out = streaming_attention(
+                q, ck, cv, q_offset=cache_len, causal=causal, window=window,
+                kv_len=cache_len + s,
+            )
         new_cache = {"k": ck, "v": cv}
 
     out = out.reshape(b, s, h * hd)

@@ -182,6 +182,7 @@ def _block(
     cache_len,
     actx: Optional[AnalogCtx],
     paged: Optional[dict] = None,
+    attn_backend: str = "stream",
 ) -> Tuple[jax.Array, Optional[dict], dict]:
     aux: Dict[str, jax.Array] = {}
     if cfg.rwkv:
@@ -206,6 +207,7 @@ def _block(
         positions=positions, window=window,
         cache=cache_l["attn"] if cache_l is not None else None,
         cache_len=cache_len, ctx=actx, aux=aux, paged=paged,
+        attn_backend=attn_backend,
     )
     x = x + h
     h2_in = norm(x, p_l["norm2"], cfg.norm)
@@ -272,6 +274,7 @@ def _scan_layers(
     pack: Optional[AnalogPack],
     remat: bool,
     paged: Optional[dict] = None,
+    attn_backend: str = "stream",
 ):
     windows = layer_windows(cfg)
     xs = {"p": params["layers"]}
@@ -292,7 +295,7 @@ def _scan_layers(
                 cfg, xs_l["p"], x,
                 positions=positions, window=window,
                 cache_l=xs_l.get("c"), cache_len=cache_len, actx=actx,
-                paged=paged,
+                paged=paged, attn_backend=attn_backend,
             )
             return x, {"cache": new_cache, "aux": aux}
 
@@ -407,13 +410,28 @@ def decode_step(
     cache: dict,
     *,
     pack: Optional[AnalogPack] = None,
+    attn_backend: str = "stream",
 ) -> Tuple[jax.Array, dict]:
     """One decode step with a KV/state cache.
 
     ``cache["len"]`` may be a scalar (all rows at the same fill — the
     ``greedy_decode`` path) or a per-row ``(B,)`` vector (continuous
     batching: every slot at its own fill, see ``repro.serve.runtime``).
+
+    ``attn_backend="stream"`` runs the online-softmax lax.scan attention;
+    ``"flash"`` the flash-decode Pallas kernel over the dense slot cache
+    (``kernels.ops.flash_attention_decode``, no sliding-window support);
+    ``"flash_oracle"`` its bitwise jnp mirror.
     """
+    if attn_backend not in ("stream", "flash", "flash_oracle"):
+        raise ValueError(f"unknown attn_backend {attn_backend!r}")
+    if attn_backend != "stream":
+        if cfg.rwkv:
+            raise ValueError("attn_backend applies to attention caches "
+                             "only; rwkv has no KV cache")
+        if cfg.sliding_window is not None:
+            raise ValueError("the flash-decode kernel has no sliding-"
+                             "window mask; use attn_backend='stream'")
     dtype = jnp.dtype(cfg.dtype)
     cp = cast_params(params, dtype)
     x = _embed(cfg, cp, token, None, dtype)
@@ -422,7 +440,7 @@ def decode_step(
         + jnp.arange(1)[None, :]
     x, new_cache, _ = _scan_layers(
         cfg, cp, x, positions=positions, cache=cache["layers"], cache_len=t,
-        pack=pack, remat=False,
+        pack=pack, remat=False, attn_backend=attn_backend,
     )
     logits = _head(cfg, cp, x, pack)
     return logits, {"layers": new_cache, "len": t + 1}

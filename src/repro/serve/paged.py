@@ -119,6 +119,14 @@ class PagedServeRuntime(ServeRuntime):
             raise ValueError(
                 "the paged runtime has no gang mode; use the dense "
                 "ServeRuntime as the static-batching baseline")
+        if kw.get("attn_backend", "stream") != "stream":
+            # decode_step_paged has its own gather/pallas backends; the
+            # flash-decode kernel reads the *dense* per-slot cache
+            raise ValueError(
+                "the paged runtime ignores attn_backend (its decode path "
+                "is decode_step_paged); use backend='pallas' for the "
+                "paged-attention kernel, or the dense ServeRuntime for "
+                "flash decode")
         if backend not in ("gather", "pallas"):
             raise ValueError(f"unknown paged backend {backend!r}; "
                              "choose 'gather' or 'pallas'")

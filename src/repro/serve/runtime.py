@@ -218,6 +218,12 @@ class ServeRuntime:
                disables EOS stopping (pure ``max_new_tokens`` budget).
     gang:      static-batching mode (admit only into an all-free server,
                one shared bucket) — the servebench baseline.
+    attn_backend: decode-step attention implementation. ``"stream"`` is
+               the online-softmax lax.scan; ``"flash"`` the flash-decode
+               Pallas kernel over the dense slot cache
+               (``kernels.ops.flash_attention_decode``); ``"flash_oracle"``
+               its bitwise jnp mirror.  Prefill always streams (flash is
+               a decode-shape kernel).  Flash has no sliding-window mask.
     measure_ttft: block on each prefill's results before stamping
                ``ttft_s``, so it measures true submit→first-token wall
                time.  Off by default: blocking defeats dispatch
@@ -241,11 +247,19 @@ class ServeRuntime:
         seed: int = 0,
         gang: bool = False,
         measure_ttft: bool = False,
+        attn_backend: str = "stream",
         manager=None,
         clock=None,
         heal=None,
     ):
         api = get_model(cfg)
+        if attn_backend not in ("stream", "flash", "flash_oracle"):
+            raise ValueError(f"unknown attn_backend {attn_backend!r}")
+        if attn_backend != "stream" and cfg.sliding_window is not None:
+            raise ValueError(
+                "the flash-decode kernel has no sliding-window mask; "
+                "serve windowed configs with attn_backend='stream'")
+        self.attn_backend = attn_backend
         if manager is not None and pack is not None:
             raise ValueError(
                 "pass either pack= (a static AnalogPack) or manager= (a "
@@ -632,11 +646,13 @@ class ServeRuntime:
         the sampling/bookkeeping tail in ``_make_decode_fn`` is shared.
         """
         cfg, params, api = self.cfg, self.params, self._api
+        attn_backend = self.attn_backend
 
         def model(state: SlotState, pack):
             cache = {"layers": state.layers, "len": state.length}
             logits, cache = api.decode_step(
-                cfg, params, state.tok[:, None], cache, pack=pack)
+                cfg, params, state.tok[:, None], cache, pack=pack,
+                attn_backend=attn_backend)
             return logits[:, -1], cache["layers"], cache["len"]
 
         return model

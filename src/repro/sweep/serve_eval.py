@@ -274,6 +274,94 @@ def runtime_agreement(
     return agree / max(total, 1)
 
 
+def pack_with_fused(pack, mode: str):
+    """A copy of an :class:`AnalogPack` with every site spec's ``fused``
+    field set to ``mode`` (``"off"`` | ``"kernel"`` | ``"oracle"``).
+
+    ``fused`` selects program structure, not numbers-on-the-wire state:
+    conductances, calibrated ranges and keys are shared by reference, so
+    the copies serve the *same device* through different lowerings —
+    exactly what :func:`fused_runtime_agreement` compares.  ``None``
+    passes through (digital serving has no pack to rewrite).
+    """
+    import dataclasses
+
+    from repro.hw.profile import SiteSpecs
+
+    if pack is None:
+        return None
+
+    def rw(s):
+        return (dataclasses.replace(s, fused=mode)
+                if isinstance(s, AnalogSpec) else s)
+
+    bands = tuple(
+        SiteSpecs(items=tuple((n, rw(s)) for n, s in ss.items))
+        for ss in pack.band_specs)
+    profile = dataclasses.replace(
+        pack.profile,
+        rules=tuple(dataclasses.replace(r, spec=rw(r.spec))
+                    for r in pack.profile.rules),
+        default=rw(pack.profile.default))
+    return dataclasses.replace(
+        pack, band_specs=bands, profile=profile,
+        head_spec=None if pack.head_spec is None else rw(pack.head_spec))
+
+
+def fused_runtime_agreement(
+    cfg: ModelConfig,
+    params: dict,
+    requests: Sequence[Tuple[Any, int]],
+    *,
+    pack=None,
+    max_slots: int = 4,
+    max_len: Optional[int] = None,
+    sampler=None,
+    seed: int = 0,
+    modes: Tuple[str, str] = ("kernel", "oracle"),
+    attn: Tuple[str, str] = ("flash", "flash_oracle"),
+) -> float:
+    """Token agreement between two fused lowerings of the same server.
+
+    Serves every request twice through :class:`repro.serve.ServeRuntime`
+    at the same device state, sampler and seed — by default once with
+    the fused Pallas kernels (``fused="kernel"`` pack + flash-decode
+    attention) and once with their jnp oracles (``fused="oracle"`` +
+    flash oracle).  The oracle side *is* the composed multi-op chain,
+    so this is the end-to-end fused-vs-composed serving gate; the
+    contract value is 1.0 (kernel and oracle are pinned bitwise inside
+    the jitted decode step), greedy or seeded sampling, digital
+    (``pack=None``) or analog, uniform or heterogeneous packs — gated
+    in ``benchmarks/servebench.py`` and pinned by
+    ``tests/test_fastpath_routing.py``.  ``modes``/``attn`` select the
+    two lowerings; e.g. ``modes=("kernel", "off")``,
+    ``attn=("stream", "stream")`` compares the fused MVM chain against
+    the legacy composed path at matched attention.
+    """
+    from repro.serve.runtime import SamplerConfig, ServeRuntime
+
+    prompts = [np.asarray(p, np.int32).reshape(-1) for p, _ in requests]
+    n_new = [int(n) for _, n in requests]
+    if max_len is None:
+        max_len = max(p.size + n for p, n in zip(prompts, n_new))
+    sampler = SamplerConfig() if sampler is None else sampler
+    outs = []
+    for mode, ab in zip(modes, attn):
+        rt = ServeRuntime(cfg, params, pack=pack_with_fused(pack, mode),
+                          max_slots=max_slots, max_len=max_len,
+                          sampler=sampler, seed=seed, attn_backend=ab)
+        for i, (p, n) in enumerate(zip(prompts, n_new)):
+            rt.submit(p, max_new_tokens=n, uid=f"req-{i}")
+        outs.append(rt.run())
+    ref, got = outs
+    agree = total = 0
+    for uid, r in ref.items():
+        g = got[uid]
+        total += max(r.size, g.size)
+        agree += int(np.sum(r[:g.size] == g[:r.size]))
+    return agree / max(total, 1)
+
+
 def paged_runtime_agreement(
     cfg: ModelConfig,
     params: dict,

@@ -34,12 +34,15 @@ MVM_SHAPES = [
 ]
 
 # off-tile-boundary shapes: rows/N far from multiples of 128 (ops.py pads
-# tiles), single-row partitions, and a tall-skinny output
+# tiles), single-row partitions, a tall-skinny output, and small-M decode
+# rows (M = 1 and 2 live lanes, far under one sublane tile)
 MVM_EDGE_SHAPES = [
     (4, 1, 1, 8),
     (8, 2, 33, 7),
     (16, 1, 129, 130),
     (8, 4, 72, 3),
+    (1, 1, 64, 16),
+    (2, 3, 40, 24),
 ]
 
 
@@ -258,9 +261,12 @@ def test_pick_tile_lane_dim_is_full_tile():
     for n in (1, 3, 7, 64, 127):
         assert ops._pick_tile(n, 128, lane=True) == 128, n
     assert ops._pick_tile(200, 128, lane=True) == 128
-    # sublane behavior unchanged
+    # sublane tiles snap up to the next power of two (Mosaic-legal
+    # second-minor sizes: 8, 16, 32, 64, 128), capped at the block max
     assert ops._pick_tile(3, 128) == 8
-    assert ops._pick_tile(33, 128) == 40
+    assert ops._pick_tile(33, 128) == 64
+    assert ops._pick_tile(64, 128) == 64
+    assert ops._pick_tile(65, 128) == 128
     assert ops._pick_tile(200, 128) == 128
 
 
@@ -381,3 +387,167 @@ def test_paged_attention_rejects_unpadded_pallas_page_size():
     q, kp, vp, ptab, kv_len = _paged_case(2, 2, 1, 8, 4, 2)
     with pytest.raises(ValueError, match="page_size"):
         ops.paged_attention(q, kp, vp, ptab, kv_len, interpret=False)
+
+
+# ---------------------------------------------------------------------------
+# fused decode chain: single-launch matmul + ADC + dequant + slice/bit
+# shift-and-add vs the jnp oracle (the composed form of the same chain)
+# ---------------------------------------------------------------------------
+
+def _fused_case(m, p, s, rows, n, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x = jnp.round(jax.random.normal(ks[0], (m, p, rows)) * 40)
+    gp = jax.random.uniform(ks[1], (s, p, rows, n)) * 0.1
+    gm = jax.random.uniform(ks[2], (s, p, rows, n)) * 0.1
+    lo = jnp.linspace(-60.0, -40.0, s).astype(jnp.float32)
+    hi = jnp.linspace(40.0, 60.0, s).astype(jnp.float32)
+    return x, gp, gm, lo, hi
+
+
+def _max_ulp(y_k, y_r):
+    y_k, y_r = np.asarray(y_k), np.asarray(y_r)
+    d = np.abs(y_k - y_r)
+    mag = np.maximum(np.abs(y_k), np.abs(y_r))
+    return float(np.max(np.where(d > 0,
+                                 d / np.spacing(mag.astype(np.float32)),
+                                 0.0)))
+
+
+def _assert_close_codes(y_k, y_r, scale, *, ulp=2.0, codes=0.25):
+    """Elementwise kernel-vs-oracle bound: within ``ulp`` float32 ulps,
+    or — for near-zero outputs, where a sub-lsb absolute drift reads as
+    millions of ulps — within ``codes`` dequant grid units (the output
+    is ``scale`` times an integer-weighted sum of ADC codes, so its
+    grid spacing is ``scale``; a drift under half a grid step can never
+    flip which quantized value either side lands on, and slice/plane
+    weights up to 2^12 amplify fp32 reassociation into that window)."""
+    y_k, y_r = np.asarray(y_k), np.asarray(y_r)
+    d = np.abs(y_k - y_r)
+    mag = np.maximum(np.abs(y_k), np.abs(y_r))
+    ok = ((d <= ulp * np.spacing(mag.astype(np.float32)))
+          | (d <= codes * float(scale)))
+    assert bool(ok.all()), (
+        f"max ulp={_max_ulp(y_k, y_r):.1f}, "
+        f"max code diff={float(d.max()) / float(scale):.2e}")
+
+
+@pytest.mark.parametrize("m,p,rows,n", [
+    (1, 1, 64, 16),     # single decode lane
+    (2, 1, 33, 7),      # small-M, off-tile rows/N
+    (8, 1, 256, 128),   # a full decode gang at the lane tile
+    (8, 2, 96, 40),     # multi-partition
+    (4, 3, 72, 24),
+])
+@pytest.mark.parametrize("n_bits", [None, 7])
+def test_fused_mvm_single_slice_bitwise(m, p, rows, n, n_bits):
+    """S == 1 — the decode MVMs the smoke LM actually serves: the fused
+    kernel is BITWISE equal to its oracle under jit (the serving path —
+    XLA contracts both sides' dot/epilogue chains identically).  Eager
+    dispatch compiles each op separately and may reassociate the bit
+    fold differently, so eagerly we pin agreement to a sliver of an ADC
+    code unit instead — far below the half-code threshold where any
+    quantized output could flip."""
+    x, gp, gm, lo, hi = _fused_case(m, p, 1, rows, n, seed=m * 11 + rows)
+    kw = dict(adc_lo=lo, adc_hi=hi, adc_bits=8, cell_bits=7,
+              n_bits=n_bits, scale=jnp.float32(3e-4))
+    y_k = ops.fused_mvm(x, gp, gm, backend="kernel", **kw)
+    y_r = ops.fused_mvm(x, gp, gm, backend="oracle", **kw)
+    codes = np.abs(np.asarray(y_k) - np.asarray(y_r)) / kw["scale"]
+    assert float(codes.max()) <= 1e-2
+    yj_k = jax.jit(lambda *a: ops.fused_mvm(*a, backend="kernel", **kw))(
+        x, gp, gm)
+    yj_r = jax.jit(lambda *a: ops.fused_mvm(*a, backend="oracle", **kw))(
+        x, gp, gm)
+    np.testing.assert_array_equal(np.asarray(yj_k), np.asarray(yj_r))
+
+
+@pytest.mark.parametrize("m,p,s,rows,n,n_bits", [
+    (8, 1, 2, 40, 24, None),
+    (4, 2, 4, 33, 7, 7),
+    (8, 1, 3, 96, 130, None),   # N over one lane tile
+    (2, 1, 4, 64, 16, 7),       # small-M sliced decode
+])
+def test_fused_mvm_multi_slice_ulp(m, p, s, rows, n, n_bits):
+    """S >= 2 multi-tile slice accumulation: the per-slice lsb factor
+    rides outside the bit fold behind an exact power-of-two slice
+    weight, so kernel-vs-oracle drift is fp32 reassociation of the
+    final sum — a couple of ULPs on full-size outputs, a sub-lsb
+    absolute sliver where slices cancel to near zero, never an ADC
+    code flip."""
+    x, gp, gm, lo, hi = _fused_case(m, p, s, rows, n, seed=s * 17 + n)
+    kw = dict(adc_lo=lo, adc_hi=hi, adc_bits=8, cell_bits=2,
+              n_bits=n_bits, scale=jnp.float32(3e-4))
+    y_k = ops.fused_mvm(x, gp, gm, backend="kernel", **kw)
+    y_r = ops.fused_mvm(x, gp, gm, backend="oracle", **kw)
+    _assert_close_codes(y_k, y_r, kw["scale"])
+
+
+@pytest.mark.parametrize("m,p,s,rows,n", [
+    (4, 1, 1, 24, 9),
+    (8, 2, 2, 33, 7),
+    (2, 1, 1, 64, 16),          # small-M decode lane
+])
+def test_fused_mvm_parasitic_matches_oracle(m, p, s, rows, n):
+    """The fused parasitic variant (per-bit Thomas solve inside the same
+    launch) against its oracle, with r_hat traced."""
+    x, gp, gm, lo, hi = _fused_case(m, p, s, rows, n, seed=rows + n)
+    x = jnp.clip(x, -127, 127)
+    kw = dict(adc_lo=lo, adc_hi=hi, adc_bits=8, cell_bits=2 if s > 1 else 7,
+              n_bits=7, scale=jnp.float32(3e-4))
+    f_k = jax.jit(lambda r: ops.fused_mvm_parasitic(
+        x, gp, gm, r_hat=r, backend="kernel", **kw))
+    f_r = jax.jit(lambda r: ops.fused_mvm_parasitic(
+        x, gp, gm, r_hat=r, backend="oracle", **kw))
+    traces = []
+    for r in (1e-5, 1e-3):
+        _assert_close_codes(f_k(jnp.float32(r)), f_r(jnp.float32(r)),
+                            kw["scale"])
+        traces.append(r)
+    assert len(traces) == 2
+
+
+# ---------------------------------------------------------------------------
+# flash-decode attention over the dense per-slot KV cache
+# ---------------------------------------------------------------------------
+
+def _flash_case(b, s, kv, g, hd, seed=0):
+    h = kv * g
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (b, h, hd), jnp.float32)
+    ck = jax.random.normal(ks[1], (b, s, kv, hd), jnp.float32)
+    cv = jax.random.normal(ks[2], (b, s, kv, hd), jnp.float32)
+    rng = np.random.default_rng(seed)
+    fills = jnp.asarray(rng.integers(1, s + 1, size=b), jnp.int32)
+    return q, ck, cv, fills
+
+
+@pytest.mark.parametrize("b,s,kv,g,hd", [
+    (1, 8, 2, 1, 8),     # single row, single group
+    (2, 16, 2, 2, 8),
+    (3, 40, 2, 1, 32),   # cache off the block multiple
+    (4, 33, 4, 2, 16),
+    (2, 9, 1, 4, 8),     # GQA onto one KV head
+])
+def test_flash_decode_bitwise_vs_oracle(b, s, kv, g, hd):
+    """Same two-phase exactness anchor as the paged kernel: the flash
+    decode kernel is BITWISE equal to its chunked-gather oracle on
+    ragged fills — what the fused runtime's token agreement rests on."""
+    q, ck, cv, fills = _flash_case(b, s, kv, g, hd, seed=b * 7 + s)
+    out = ops.flash_attention_decode(q, ck, cv, fills, backend="kernel")
+    want = ops.flash_attention_decode(q, ck, cv, fills, backend="oracle")
+    assert out.shape == (b, kv * g, hd)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+
+
+def test_flash_decode_invariant_to_cache_tail():
+    """Positions >= kv_len[b] are exact zeros in both phases: garbage in
+    the unwritten tail of the dense cache cannot leak into the output."""
+    q, ck, cv, fills = _flash_case(3, 16, 2, 2, 8, seed=9)
+    base = np.asarray(ops.flash_attention_decode(q, ck, cv, fills))
+    ckg, cvg = np.asarray(ck).copy(), np.asarray(cv).copy()
+    for i, n in enumerate(np.asarray(fills)):
+        ckg[i, int(n):] = 1e9
+        cvg[i, int(n):] = -1e9
+    out = ops.flash_attention_decode(q, jnp.asarray(ckg), jnp.asarray(cvg),
+                                     fills)
+    np.testing.assert_array_equal(base, np.asarray(out))

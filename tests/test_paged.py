@@ -244,6 +244,11 @@ def test_paged_validation_errors(lm):
     with pytest.raises(ValueError, match="backend"):
         PagedServeRuntime(cfg, params, max_len=16, page_size=4,
                           backend="dense")
+    with pytest.raises(ValueError, match="attn_backend"):
+        # flash decode reads the dense per-slot cache; the paged decode
+        # path must refuse it rather than silently stream
+        PagedServeRuntime(cfg, params, max_len=16, page_size=4,
+                          attn_backend="flash")
     with pytest.raises(ValueError, match="num_pages"):
         PagedServeRuntime(cfg, params, max_len=16, page_size=4, num_pages=3)
     with pytest.raises(ValueError, match="page_size"):
